@@ -1,0 +1,300 @@
+"""Benchmarks reproducing each Deep RC paper artifact (Tables 1-4, Fig 4).
+
+Sizes default to container scale (1 CPU core); ``--full`` approaches paper
+scale.  Every function returns rows of (name, us_per_call, derived) for the
+CSV contract of benchmarks.run.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bridge.loader import window_batches
+from repro.core.agent import RemoteAgent
+from repro.core.bridge import cylon_stage, dl_stage
+from repro.core.pilot import PilotDescription, PilotManager
+from repro.core.pipeline import Pipeline, run_pipelines
+from repro.core.task import TaskDescription
+from repro.models import forecasting as F
+from repro.models import hydrology as Hy
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# shared training loop (bare-metal path)
+# ---------------------------------------------------------------------------
+
+
+def _train_forecaster(name: str, steps: int, W=96, Hz=24, batch=128,
+                      lr=1e-3, seed=0):
+    init, apply = F.MODELS[name](W, Hz)
+    params = init(jax.random.PRNGKey(seed))
+    series = F.make_ett_series(4096, seed=seed)
+    split = 3 * len(series) // 4
+
+    @jax.jit
+    def step(params, key):
+        starts = jax.random.randint(key, (batch,), 0, split - W - Hz)
+        idx = starts[:, None] + jnp.arange(W + Hz)[None, :]
+        data = series[idx]
+        x, y = data[:, :W], data[:, W:]
+
+        def loss_fn(p):
+            return jnp.mean((apply(p, x) - y) ** 2)
+
+        l, g = jax.value_and_grad(loss_fn)(params)
+        params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+        return params, l
+
+    key = jax.random.PRNGKey(seed + 1)
+    t0 = time.time()
+    for i in range(steps):
+        key, sub = jax.random.split(key)
+        params, l = step(params, sub)
+    l.block_until_ready()
+    train_s = time.time() - t0
+    # eval on held-out suffix
+    starts = np.arange(split, len(series) - W - Hz, Hz)
+    idx = starts[:, None] + np.arange(W + Hz)[None, :]
+    data = np.asarray(series)[idx]
+    x, y = jnp.asarray(data[:, :W]), data[:, W:]
+    pred = np.asarray(apply(params, x))
+    mae = float(np.mean(np.abs(pred - y)))
+    mse = float(np.mean((pred - y) ** 2))
+    mape = float(np.mean(np.abs(pred - y) / np.maximum(np.abs(y), 0.5))) * 100
+    return {"train_s": train_s, "MAE": mae, "MSE": mse, "MAPE": mape,
+            "loss": float(l)}
+
+
+# ---------------------------------------------------------------------------
+# Table 3 — 11 forecasting models, bare-metal vs Deep RC
+# ---------------------------------------------------------------------------
+
+
+def bench_forecasting(full: bool = False) -> List[Tuple]:
+    steps = 400 if full else 60
+    rows = []
+    results = {}
+    pm = PilotManager()
+    agent = RemoteAgent(pm.submit_pilot(PilotDescription()), max_workers=1)
+    for name in F.MODELS:
+        bm = _train_forecaster(name, steps)
+
+        def task_fn(comm, nm=name):
+            return _train_forecaster(nm, steps)
+
+        t0 = time.time()
+        task, = agent.submit([TaskDescription(name=name, fn=task_fn, kind="train")])
+        rc_total = time.time() - t0
+        rc = task.result
+        overhead = rc_total - rc["train_s"]
+        results[name] = {"bm": bm, "rc": rc, "overhead_s": overhead}
+        rows.append((f"forecast/{name}/bm_train", bm["train_s"] * 1e6 / steps,
+                     f"mae={bm['MAE']:.3f};mse={bm['MSE']:.3f};mape={bm['MAPE']:.2f}"))
+        rows.append((f"forecast/{name}/rc_train", rc_total * 1e6 / steps,
+                     f"overhead_s={overhead:.3f}"))
+    _dump("forecasting", results)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Tables 1-2 — hydrology LSTM: accuracy + overhead decomposition
+# ---------------------------------------------------------------------------
+
+
+def bench_hydrology(full: bool = False) -> List[Tuple]:
+    steps = 2000 if full else 150
+    window = 64
+    feats, targets = Hy.make_camels_like(5000 if full else 2000)
+    x_all, y_all = Hy.window_dataset(feats, targets, window)
+    n = x_all.shape[0]
+    split = 3 * n // 4
+    params = Hy.lstm_init(jax.random.PRNGKey(0))
+
+    @jax.jit
+    def step(params, key):
+        idx = jax.random.randint(key, (64,), 0, split)
+        x, y = x_all[idx], y_all[idx]
+
+        def loss_fn(p):
+            return jnp.mean((Hy.lstm_apply(p, x) - y) ** 2)
+
+        l, g = jax.value_and_grad(loss_fn)(params)
+        return jax.tree.map(lambda p, gg: p - 3e-3 * gg, params, g), l
+
+    def run_train(comm=None):
+        p = params
+        key = jax.random.PRNGKey(1)
+        t0 = time.time()
+        for _ in range(steps):
+            key, sub = jax.random.split(key)
+            p, l = step(p, sub)
+        l.block_until_ready()
+        return p, time.time() - t0
+
+    # bare metal
+    p_bm, bm_s = run_train()
+    # Deep RC
+    pm = PilotManager()
+    agent = RemoteAgent(pm.submit_pilot(PilotDescription()), max_workers=1)
+    t0 = time.time()
+    task, = agent.submit([TaskDescription(
+        name="hydrology", fn=lambda comm: run_train(comm), kind="train")])
+    rc_total = time.time() - t0
+    _, rc_train_s = task.result
+    overhead = rc_total - rc_train_s
+
+    # Table-1 metrics per target
+    pred_tr = np.asarray(Hy.lstm_apply(p_bm, x_all[:split]))
+    pred_va = np.asarray(Hy.lstm_apply(p_bm, x_all[split:]))
+    y_tr, y_va = np.asarray(y_all[:split]), np.asarray(y_all[split:])
+    metrics = {}
+    for i, t in enumerate(Hy.TARGETS):
+        metrics[t] = {
+            "train_mse": float(np.mean((pred_tr[:, i] - y_tr[:, i]) ** 2)),
+            "val_mse": float(np.mean((pred_va[:, i] - y_va[:, i]) ** 2)),
+            "train_nnse": float(Hy.nnse(jnp.asarray(pred_tr[:, i]), jnp.asarray(y_tr[:, i]))),
+            "val_nnse": float(Hy.nnse(jnp.asarray(pred_va[:, i]), jnp.asarray(y_va[:, i]))),
+        }
+    out = {"bm_train_s": bm_s, "rc_train_s": rc_train_s,
+           "rc_total_s": rc_total, "overhead_s": overhead,
+           "task_overheads": task.overhead_s, "metrics": metrics}
+    _dump("hydrology", out)
+    rows = [("hydrology/bm_train", bm_s * 1e6 / steps, f"steps={steps}"),
+            ("hydrology/rc_overhead", overhead * 1e6, "constant-vs-scale")]
+    for t, m in metrics.items():
+        rows.append((f"hydrology/{t}", 0.0,
+                     f"val_mse={m['val_mse']:.4f};val_nnse={m['val_nnse']:.3f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 4 — sort/join strong+weak scaling (subprocess per worker count)
+# ---------------------------------------------------------------------------
+
+_SCALING_SNIPPET = r"""
+import os, sys, time, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(workers)d"
+sys.path.insert(0, %(src)r)
+import jax, jax.numpy as jnp, numpy as np
+from repro.launch.mesh import make_mesh
+from repro.dataframe.table import Table
+from repro.dataframe import ops_dist as D
+W = %(workers)d
+rows = %(rows)d
+mesh = make_mesh((W,), ("data",))
+rng = np.random.default_rng(0)
+t = Table.from_columns({"k": rng.integers(0, rows, rows).astype(np.int32),
+                        "v": rng.normal(size=rows).astype(np.float32)}, mesh)
+r = Table.from_columns({"k": np.arange(rows//2).astype(np.int32),
+                        "w": np.ones(rows//2, np.float32)}, mesh)
+out = {}
+for op in ("sort", "join"):
+    fn = (lambda: D.sort(t, "k")) if op == "sort" else (lambda: D.join(t, r, "k"))
+    fn()  # warmup/compile
+    t0 = time.time(); res, dropped = fn()
+    jax.block_until_ready(res.columns)
+    out[op] = {"s": time.time() - t0, "dropped": dropped}
+print("RESULT::" + json.dumps(out))
+"""
+
+
+def bench_scaling_ops(full: bool = False) -> List[Tuple]:
+    worker_counts = [1, 2, 4, 8]
+    base_rows = 200_000 if full else 40_000
+    results: Dict = {"strong": {}, "weak": {}}
+    for mode in ("strong", "weak"):
+        for w in worker_counts:
+            rows_n = base_rows if mode == "strong" else base_rows // 4 * w
+            code = _SCALING_SNIPPET % {
+                "workers": w, "rows": rows_n, "src": os.path.join(REPO, "src")}
+            r = subprocess.run([sys.executable, "-c", code],
+                               capture_output=True, text=True, timeout=600)
+            if r.returncode != 0:
+                results[mode][w] = {"error": r.stderr[-500:]}
+                continue
+            line = [l for l in r.stdout.splitlines() if l.startswith("RESULT::")][0]
+            results[mode][w] = json.loads(line[8:])
+    _dump("scaling_ops", results)
+    rows = []
+    for mode, per_w in results.items():
+        for w, ops in per_w.items():
+            for op, d in ops.items():
+                if isinstance(d, dict) and "s" in d:
+                    rows.append((f"scaling/{mode}/{op}/w{w}", d["s"] * 1e6,
+                                 f"dropped={d['dropped']}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 4 — multi-pipeline: shared pilot vs bare-metal sequential
+# ---------------------------------------------------------------------------
+
+
+def bench_multi_pipeline(full: bool = False) -> List[Tuple]:
+    n_pipelines = 11
+    steps = 30 if not full else 200
+    names = list(F.MODELS)[:n_pipelines]
+
+    def infer_fn(comm, upstream, nm):
+        # inference task: forward pass over a fresh batch, many repeats
+        init, apply = F.MODELS[nm](96, 24)
+        params = init(jax.random.PRNGKey(0))
+        x = jnp.zeros((256, 96))
+        f = jax.jit(lambda p, x: apply(p, x))
+        f(params, x).block_until_ready()
+        t0 = time.time()
+        for _ in range(10):
+            y = f(params, x)
+        y.block_until_ready()
+        return time.time() - t0
+
+    def cylon_fn(comm, upstream):
+        import numpy as np
+        from repro.dataframe.table import Table
+        from repro.dataframe import ops_local as L
+        rng = np.random.default_rng(0)
+        n = 20_000
+        t = Table.from_columns({"k": rng.integers(0, n, n).astype(np.int32),
+                                "v": rng.normal(size=n).astype(np.float32)})
+        cols, valid = L.sort_by_key(t.columns, t.valid, "k")
+        return float(jnp.sum(jnp.where(valid, cols["v"], 0)))
+
+    # bare metal: run everything sequentially, re-"acquiring" per pipeline
+    t0 = time.time()
+    for nm in names:
+        cylon_fn(None, None)
+        infer_fn(None, None, nm)
+    bm_s = time.time() - t0
+
+    # Deep RC: one pilot, one shared data-eng task + N overlapped inference
+    pipes = []
+    for nm in names:
+        pipes.append(Pipeline(f"pipe-{nm}", [
+            cylon_stage("join", cylon_fn),
+            dl_stage("infer", lambda c, u, nm=nm: infer_fn(c, u, nm),
+                     deps=("join",), kind="inference"),
+        ]))
+    t0 = time.time()
+    out = run_pipelines(pipes, max_workers=4)
+    rc_s = time.time() - t0
+    res = {"bm_s": bm_s, "rc_s": rc_s, "saved_s": bm_s - rc_s,
+           "n_pipelines": n_pipelines}
+    _dump("multi_pipeline", res)
+    return [("multi_pipeline/bm", bm_s * 1e6, f"n={n_pipelines}"),
+            ("multi_pipeline/deep_rc", rc_s * 1e6, f"saved_s={bm_s - rc_s:.2f}")]
+
+
+def _dump(name: str, obj) -> None:
+    os.makedirs(os.path.join(REPO, "results", "bench"), exist_ok=True)
+    with open(os.path.join(REPO, "results", "bench", f"{name}.json"), "w") as f:
+        json.dump(obj, f, indent=1, default=float)

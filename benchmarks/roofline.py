@@ -1,0 +1,78 @@
+"""Roofline table generator: reads results/dryrun/*.json (written by
+repro.launch.dryrun) and emits the EXPERIMENTS.md §Roofline table plus
+(name, us_per_call, derived) rows for benchmarks.run."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Tuple
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# MODEL_FLOPS: 6*N*D (dense) or 6*N_active*D (MoE), N from the configs
+PARAMS_B = {
+    "phi3-medium-14b": 14.0e9, "tinyllama-1.1b": 1.1e9, "minicpm3-4b": 4.0e9,
+    "phi3-mini-3.8b": 3.8e9, "moonshot-v1-16b-a3b": 16.0e9,
+    "arctic-480b": 482e9, "qwen2-vl-72b": 72.7e9, "xlstm-125m": 0.125e9,
+    "recurrentgemma-9b": 9.2e9, "whisper-medium": 0.77e9,
+}
+ACTIVE_B = dict(PARAMS_B, **{"moonshot-v1-16b-a3b": 3.0e9, "arctic-480b": 17e9})
+TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+          "decode_32k": 128, "long_500k": 1}
+STEP_FACTOR = {"train": 3.0, "prefill": 1.0, "decode": 1.0}  # fwd+bwd = 3x fwd
+
+
+def load(mesh: str = "single") -> List[dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(REPO, "results", "dryrun",
+                                           f"*__{mesh}.json"))):
+        out.append(json.load(open(p)))
+    return out
+
+
+def model_flops(arch: str, shape: str, kind: str) -> float:
+    n = ACTIVE_B[arch]
+    return 2.0 * n * TOKENS[shape] * STEP_FACTOR[kind]
+
+
+def table(mesh: str = "single") -> str:
+    rows = []
+    hdr = (f"| {'arch':21s} | {'shape':11s} | comp(s) | mem(s) | coll(s) | "
+           f"dominant | mem/dev | MODEL/HLO | note |")
+    sep = "|" + "---|" * 9
+    for r in load(mesh):
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']:21s} | {r['shape']:11s} | FAIL: {r.get('error','')[:40]} |")
+            continue
+        rl, c = r["roofline"], r["cost"]
+        mf = model_flops(r["arch"], r["shape"], r["kind"])
+        hlo_total = c["flops_per_device"] * r["n_chips"]
+        ratio = mf / hlo_total if hlo_total else 0.0
+        mem = r["memory"]["per_device_bytes_tpu_adjusted"] / 1e9
+        fits = "" if r["memory"]["fits_16gb_tpu_adjusted"] else " OVER"
+        rows.append(
+            f"| {r['arch']:21s} | {r['shape']:11s} | {rl['compute_s']:.4g} | "
+            f"{rl['memory_s']:.4g} | {rl['collective_s']:.4g} | "
+            f"{rl['dominant'].replace('_s',''):8s} | {mem:.1f}GB{fits} | "
+            f"{ratio:.3f} | |"
+        )
+    return "\n".join([hdr, sep] + rows)
+
+
+def bench_roofline(full: bool = False) -> List[Tuple]:
+    rows = []
+    for r in load("single"):
+        if not r.get("ok"):
+            continue
+        rl = r["roofline"]
+        dom = rl["dominant"]
+        frac = rl["compute_s"] / max(rl[dom], 1e-12)
+        rows.append((f"roofline/{r['arch']}/{r['shape']}", rl[dom] * 1e6,
+                     f"dominant={dom};compute_frac={frac:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    print(table(sys.argv[1] if len(sys.argv) > 1 else "single"))

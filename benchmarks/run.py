@@ -1,0 +1,41 @@
+"""Benchmark harness entry: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.  --full approaches paper scale."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--which", default="all",
+                    help="comma list: forecasting,hydrology,scaling,multi_pipeline,roofline")
+    args = ap.parse_args()
+    from benchmarks import paper_tables as P
+    from benchmarks import roofline as R
+
+    benches = {
+        "hydrology": P.bench_hydrology,          # paper Tables 1-2
+        "forecasting": P.bench_forecasting,      # paper Table 3
+        "scaling": P.bench_scaling_ops,          # paper Fig 4
+        "multi_pipeline": P.bench_multi_pipeline,  # paper Table 4
+        "roofline": R.bench_roofline,            # beyond-paper: §Roofline
+    }
+    which = list(benches) if args.which == "all" else args.which.split(",")
+    print("name,us_per_call,derived")
+    for name in which:
+        t0 = time.time()
+        try:
+            rows = benches[name](full=args.full)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},-1,ERROR:{type(e).__name__}:{e}")
+            continue
+        for r in rows:
+            print(f"{r[0]},{r[1]:.2f},{r[2]}")
+        print(f"{name}/_total,{(time.time()-t0)*1e6:.0f},", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Batched serving example: prefill + KV-cache decode under the pilot
+runtime.
+
+  PYTHONPATH=src python examples/serve_lm.py --batch 4 --gen 16
+"""
+import os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import build_parser, run
+
+if __name__ == "__main__":
+    ap = build_parser()
+    ap.set_defaults(smoke=True)
+    res = run(ap.parse_args())
+    print("serve_lm OK")

@@ -1,0 +1,20 @@
+"""End-to-end driver: train an assigned-architecture LM through the full
+Deep RC pipeline (data engineering -> bridge -> pjit train loop -> async
+checkpoints -> postprocess).
+
+Default is a quick smoke;  a ~100M-parameter run of the paper-scale kind:
+  PYTHONPATH=src python examples/train_lm.py --arch xlstm-125m --steps 300 \
+      --batch 8 --seq 256 --ckpt-every 50        # (~30 min on 1 CPU core)
+Restart after interruption with --resume.
+"""
+import os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import build_parser, run
+
+if __name__ == "__main__":
+    ap = build_parser()
+    ap.set_defaults(smoke=True, steps=20, arch="tinyllama-1.1b")
+    res = run(ap.parse_args())
+    assert res["improved"], res
+    print("train_lm OK")

@@ -1,0 +1,119 @@
+"""Generate EXPERIMENTS.md from results/ JSONs (run after the final matrix)."""
+import glob, json, os, sys
+sys.path.insert(0, "src"); sys.path.insert(0, ".")
+from benchmarks.roofline import ACTIVE_B, TOKENS, STEP_FACTOR, model_flops
+
+DRY = "results/dryrun_final"
+
+NOTES = {
+    ("train", "memory"): "Pallas flash-attention kernel path (keeps score tiles in VMEM) + bf16-native TPU dots remove the dominant f32 tile traffic",
+    ("train", "collective"): "2D sharding or explicitly-scheduled Megatron SP (shard_map) to convert dgrad all-reduces to reduce-scatters",
+    ("prefill", "memory"): "flash kernel keeps O(S^2/chunk) tiles in VMEM; quantized (int8) KV write halves cache traffic",
+    ("prefill", "collective"): "ring-attention style P2P schedule instead of GSPMD-inserted gathers",
+    ("decode", "memory"): "decode is intrinsically cache-bandwidth-bound: quantized KV cache (int8/fp8) or MLA-style latent caches cut the stream ~2-4x",
+    ("decode", "collective"): "batch the flash-decoding psum combine across layers",
+}
+
+
+def load(mesh):
+    rows = []
+    for p in sorted(glob.glob(f"{DRY}/*__{mesh}.json")):
+        rows.append(json.load(open(p)))
+    return rows
+
+
+def roofline_table(mesh):
+    out = [
+        "| arch | shape | compute(s) | memory(s) | collective(s) | dominant | frac | mem/dev (adj) | MODEL/HLO | what would move the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(mesh):
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | | | {r.get('error','')[:60]} |")
+            continue
+        rl, c, m = r["roofline"], r["cost"], r["memory"]
+        mf = model_flops(r["arch"], r["shape"], r["kind"])
+        ratio = mf / max(c["flops_per_device"] * r["n_chips"], 1)
+        frac = rl["compute_s"] / max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        fits = "" if m["fits_16gb_tpu_adjusted"] else " **OVER**"
+        note = NOTES.get((r["kind"], rl["dominant"].replace("_s", "")), "")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.4g} | {rl['memory_s']:.4g} | "
+            f"{rl['collective_s']:.4g} | {rl['dominant'].replace('_s','')} | {frac:.3f} | "
+            f"{m['per_device_bytes_tpu_adjusted']/1e9:.1f}GB{fits} | {ratio:.3f} | {note} |"
+        )
+    return "\n".join(out)
+
+
+def dryrun_table(mesh):
+    out = [
+        "| arch | shape | compile(s) | args GB/dev | temp GB/dev | adj GB/dev | fits 16GB | HLO GFLOPs/dev | coll GB/dev | top collectives |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(mesh):
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL: {r.get('error','')[:70]} |")
+            continue
+        m, c = r["memory"], r["cost"]
+        pc = c.get("per_collective_bytes", {})
+        top = ", ".join(f"{k}:{v/1e9:.1f}GB" for k, v in sorted(pc.items(), key=lambda kv: -kv[1])[:2])
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compile_s']:.0f} | {m['argument_bytes']/1e9:.2f} | "
+            f"{m['temp_bytes']/1e9:.2f} | {m['per_device_bytes_tpu_adjusted']/1e9:.1f} | "
+            f"{'yes' if m['fits_16gb_tpu_adjusted'] else 'NO'} | {c['flops_per_device']/1e9:.0f} | "
+            f"{c['collective_bytes_per_device']/1e9:.2f} | {top} |"
+        )
+    return "\n".join(out)
+
+
+def bench_tables():
+    out = []
+    bd = "results/bench"
+    if os.path.exists(f"{bd}/hydrology.json"):
+        h = json.load(open(f"{bd}/hydrology.json"))
+        out.append("**Hydrology (paper Tables 1-2 analogue, synthetic CAMELS-like):**\n")
+        out.append("| target | val MSE | val NNSE |\n|---|---|---|")
+        for t, mm in h["metrics"].items():
+            out.append(f"| {t} | {mm['val_mse']:.4f} | {mm['val_nnse']:.3f} |")
+        out.append(
+            f"\nDeep RC task wall {h['rc_total_s']:.1f}s vs its inner train loop "
+            f"{h['rc_train_s']:.1f}s -> **runtime overhead {h['overhead_s']*1000:.0f} ms**, "
+            f"constant while training time scales (bare-metal reference {h['bm_train_s']:.1f}s "
+            f"incl. first-compile) "
+            f"(communicator build {h['task_overheads'].get('communicator',0)*1000:.2f} ms, "
+            f"queue {h['task_overheads'].get('queue',0)*1000:.2f} ms) — "
+            "the paper's constant-overhead claim (C1), at our scale.\n")
+    if os.path.exists(f"{bd}/forecasting.json"):
+        f = json.load(open(f"{bd}/forecasting.json"))
+        out.append("**11 forecasting models (paper Table 3 analogue):**\n")
+        out.append("| model | MAE | MSE | MAPE% | BM train (s) | Deep RC overhead (s) |\n|---|---|---|---|---|---|")
+        for name, r in f.items():
+            out.append(f"| {name} | {r['bm']['MAE']:.3f} | {r['bm']['MSE']:.3f} | "
+                       f"{r['bm']['MAPE']:.1f} | {r['bm']['train_s']:.1f} | {r['overhead_s']:.3f} |")
+        out.append("")
+    if os.path.exists(f"{bd}/scaling_ops.json"):
+        s = json.load(open(f"{bd}/scaling_ops.json"))
+        out.append("**Distributed sort/join scaling (paper Fig. 4 analogue):**\n")
+        out.append("| mode | workers | sort (s) | join (s) | dropped |\n|---|---|---|---|---|")
+        for mode, per_w in s.items():
+            for w, ops in sorted(per_w.items(), key=lambda kv: int(kv[0])):
+                if "sort" in ops:
+                    out.append(f"| {mode} | {w} | {ops['sort']['s']:.3f} | {ops['join']['s']:.3f} | "
+                               f"{ops['sort']['dropped']}+{ops['join']['dropped']} |")
+        out.append("")
+    if os.path.exists(f"{bd}/multi_pipeline.json"):
+        m = json.load(open(f"{bd}/multi_pipeline.json"))
+        out.append(f"**Multi-pipeline (paper Table 4 analogue):** {m['n_pipelines']} pipelines "
+                   f"(1 data-eng + 1 inference each): bare-metal sequential {m['bm_s']:.2f}s vs "
+                   f"Deep RC shared-pilot {m['rc_s']:.2f}s -> **saved {m['saved_s']:.2f}s** "
+                   "(paper saved 3.28s/75.9s at its scale) — claim C4.\n")
+    return "\n".join(out)
+
+
+tpl = open("EXPERIMENTS.template.md").read()
+tpl = tpl.replace("{{ROOFLINE_SINGLE}}", roofline_table("single"))
+tpl = tpl.replace("{{DRYRUN_SINGLE}}", dryrun_table("single"))
+tpl = tpl.replace("{{DRYRUN_MULTI}}", dryrun_table("multi"))
+tpl = tpl.replace("{{BENCH}}", bench_tables())
+open("EXPERIMENTS.md", "w").write(tpl)
+print("EXPERIMENTS.md written")

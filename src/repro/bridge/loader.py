@@ -1,0 +1,153 @@
+"""Deep RC Data Bridge: the zero-copy distributed data loader.
+
+Paper §2.4: the Cylon Global Table is handed to the DL framework without a
+materializing copy; workers prefetch batches in parallel; pinned memory +
+DMA overlap host->device transfers.
+
+TPU-native re-founding:
+
+* ``ZeroCopyLoader`` — the GT's columns already live in HBM sharded over
+  the mesh's data axis.  A batch is a compiled gather (slice or
+  permutation-take) on those buffers: no host roundtrip, no copy of the
+  table.  This *is* the zero-copy claim, made structural.
+* ``HostPrefetcher`` — for host-resident sources (the paper's
+  pinned-memory DMA case): a double-buffered ``device_put`` pipeline that
+  keeps transfer N+1 in flight while step N computes.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Callable, Dict, Iterator, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dataframe.table import Table
+
+
+class ZeroCopyLoader:
+    """Iterate (features, labels) minibatches straight off a distributed
+    Table.  Batches are device-resident views (compiled gathers); an
+    optional per-epoch on-device permutation provides shuffling."""
+
+    def __init__(
+        self,
+        table: Table,
+        feature_cols: Sequence[str],
+        label_col: str,
+        global_batch: int,
+        *,
+        shuffle: bool = True,
+        seed: int = 0,
+        drop_remainder: bool = True,
+    ):
+        self.table = table
+        self.feature_cols = list(feature_cols)
+        self.label_col = label_col
+        self.global_batch = int(global_batch)
+        self.shuffle = shuffle
+        self.seed = seed
+        n = table.num_rows
+        self.steps_per_epoch = n // self.global_batch if drop_remainder else -(-n // self.global_batch)
+
+        mesh = table.mesh
+        if mesh is not None:
+            out_shard = NamedSharding(mesh, P(table.axis))
+        else:
+            out_shard = None
+
+        def gather_batch(cols, valid, perm, step):
+            lo = step * self.global_batch
+            idx = jax.lax.dynamic_slice_in_dim(perm, lo, self.global_batch)
+            feats = jnp.stack(
+                [jnp.take(cols[c], idx, axis=0).astype(jnp.float32)
+                 for c in self.feature_cols], axis=-1,
+            )
+            labels = jnp.take(cols[self.label_col], idx, axis=0)
+            mask = jnp.take(valid, idx, axis=0)
+            return feats, labels, mask
+
+        self._gather = jax.jit(
+            gather_batch,
+            out_shardings=(out_shard, out_shard, out_shard) if out_shard else None,
+        )
+        self._perm_fn = jax.jit(
+            lambda key, n: jax.random.permutation(key, n),
+            static_argnums=(1,),
+        )
+
+    def epoch(self, epoch_idx: int = 0) -> Iterator:
+        n = self.table.num_rows
+        if self.shuffle:
+            perm = self._perm_fn(jax.random.PRNGKey(self.seed + epoch_idx), n)
+        else:
+            perm = jnp.arange(n)
+        for step in range(self.steps_per_epoch):
+            yield self._gather(self.table.columns, self.table.valid, perm, step)
+
+    def __iter__(self):
+        return self.epoch(0)
+
+
+class HostPrefetcher:
+    """Double-buffered host->device pipeline (the pinned-memory/DMA overlap
+    of the paper, expressed as ahead-of-time ``device_put``)."""
+
+    def __init__(self, host_iter: Iterator, sharding=None, depth: int = 2):
+        self.host_iter = host_iter
+        self.sharding = sharding
+        self.depth = depth
+        self._queue: collections.deque = collections.deque()
+        self._lock = threading.Lock()
+        self._exhausted = False
+
+    def _put(self, item):
+        if self.sharding is not None:
+            return jax.tree.map(lambda x: jax.device_put(x, self.sharding), item)
+        return jax.tree.map(jax.device_put, item)
+
+    def _fill(self):
+        while len(self._queue) < self.depth and not self._exhausted:
+            try:
+                item = next(self.host_iter)
+            except StopIteration:
+                self._exhausted = True
+                return
+            self._queue.append(self._put(item))  # transfer starts async
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        with self._lock:
+            self._fill()
+            if not self._queue:
+                raise StopIteration
+            out = self._queue.popleft()
+            self._fill()  # keep next transfer in flight
+            return out
+
+
+def window_batches(
+    table: Table,
+    series_col: str,
+    window: int,
+    horizon: int,
+    global_batch: int,
+    *,
+    key: Optional[jax.Array] = None,
+):
+    """Forecasting helper: sample (window -> horizon) slices from a time
+    series column, entirely on device (used by the NeuralForecast-analogue
+    pipelines)."""
+    series = table.col(series_col)
+    n = series.shape[0] - window - horizon
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    starts = jax.random.randint(key, (global_batch,), 0, max(n, 1))
+    idx = starts[:, None] + jnp.arange(window + horizon)[None, :]
+    data = jnp.take(series, idx, axis=0)
+    return data[:, :window], data[:, window:]

@@ -1,0 +1,9 @@
+from repro.common.params import (  # noqa: F401
+    Param,
+    abstract_params,
+    init_params,
+    is_param,
+    map_params,
+    param_bytes,
+    param_count,
+)

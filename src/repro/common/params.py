@@ -1,0 +1,94 @@
+"""Parameter-spec system.
+
+Models declare their parameters as a pytree of :class:`Param` leaves, each
+carrying a shape, dtype, *logical axis names* and an initializer tag.  The
+same tree drives three things:
+
+* ``init_params``      — materialize values (for smoke tests / examples),
+* ``abstract_params``  — ShapeDtypeStructs (for the AOT dry-run; no memory),
+* ``logical_to_mesh``  — PartitionSpecs via the sharding rules
+  (:mod:`repro.distributed.sharding`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """Declaration of a single parameter tensor."""
+
+    shape: tuple
+    axes: tuple  # logical axis name (or None) per dim; len == len(shape)
+    dtype: Any = jnp.float32
+    init: str = "normal"  # normal | zeros | ones | embed | scaled
+    scale: Optional[float] = None  # stddev override for normal/scaled
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(
+                f"Param axes {self.axes} rank mismatch vs shape {self.shape}"
+            )
+
+
+def _fan_in(shape: tuple) -> int:
+    # the contraction dim is by convention the second-to-last for matrices,
+    # the last dim is the output.  For vectors there is no fan-in.
+    if len(shape) <= 1:
+        return 1
+    return int(np.prod(shape[:-1]))
+
+
+def _init_one(key: jax.Array, p: Param) -> jax.Array:
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, p.dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, p.dtype)
+    if p.init == "embed":
+        std = p.scale if p.scale is not None else 0.02
+        return (jax.random.normal(key, p.shape, jnp.float32) * std).astype(p.dtype)
+    if p.init in ("normal", "scaled"):
+        std = p.scale if p.scale is not None else 1.0 / math.sqrt(max(_fan_in(p.shape), 1))
+        return (jax.random.normal(key, p.shape, jnp.float32) * std).astype(p.dtype)
+    raise ValueError(f"unknown init {p.init}")
+
+
+def is_param(x: Any) -> bool:
+    return isinstance(x, Param)
+
+
+def init_params(key: jax.Array, specs: PyTree) -> PyTree:
+    """Materialize a Param tree into concrete arrays."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_param)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(k, p) for k, p in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(specs: PyTree) -> PyTree:
+    """Param tree -> ShapeDtypeStruct tree (zero allocation)."""
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), specs, is_leaf=is_param
+    )
+
+
+def param_count(specs: PyTree) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_param)
+    return int(sum(np.prod(p.shape) for p in leaves))
+
+
+def param_bytes(specs: PyTree) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_param)
+    return int(sum(np.prod(p.shape) * np.dtype(p.dtype).itemsize for p in leaves))
+
+
+def map_params(fn: Callable[[Param], Any], specs: PyTree) -> PyTree:
+    return jax.tree.map(fn, specs, is_leaf=is_param)

@@ -1,0 +1,73 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    ModelConfig,
+    RunConfig,
+    SHAPES,
+    SMOKE_SHAPES,
+    ShapeConfig,
+    block_pattern,
+)
+
+ARCHS = {
+    "phi3-medium-14b": "phi3_medium_14b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "minicpm3-4b": "minicpm3_4b",
+    "phi3-mini-3.8b": "phi3_mini_3_8b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "arctic-480b": "arctic_480b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "xlstm-125m": "xlstm_125m",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "whisper-medium": "whisper_medium",
+}
+
+# archs whose attention is fully quadratic: long_500k is skipped per brief
+FULL_ATTENTION_ARCHS = {
+    "phi3-medium-14b", "tinyllama-1.1b", "minicpm3-4b", "phi3-mini-3.8b",
+    "moonshot-v1-16b-a3b", "arctic-480b", "qwen2-vl-72b", "whisper-medium",
+}
+
+
+def shape_applicable(arch: str, shape: str) -> bool:
+    if shape == "long_500k" and arch in FULL_ATTENTION_ARCHS:
+        return False
+    return True
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    mod = importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+    return mod.smoke_config() if smoke else mod.config()
+
+
+def default_run_config(arch: str, shape: str) -> RunConfig:
+    """Per-cell runtime knobs sized so the dry-run fits 16 GB/chip HBM."""
+    import jax.numpy as jnp
+
+    micro = 1
+    optimizer, opt_dtype = "adamw", jnp.float32
+    if shape == "train_4k":
+        # sized so the per-microbatch residual stack (L x tok/dev x d x 2B,
+        # double-buffered) + params + opt states fits 16 GB/chip
+        micro = {
+            "qwen2-vl-72b": 8, "arctic-480b": 16, "phi3-medium-14b": 8,
+            "recurrentgemma-9b": 8, "minicpm3-4b": 8, "phi3-mini-3.8b": 4,
+            "moonshot-v1-16b-a3b": 8, "whisper-medium": 2,
+            "tinyllama-1.1b": 2, "xlstm-125m": 4,
+        }.get(arch, 1)
+    grad_clip = 1.0
+    if arch == "arctic-480b":
+        # adafactor: factored states fit HBM; its internal RMS update
+        # clipping replaces global-norm clip (whose f32 upcast of the
+        # 480B grad tree would spike ~10 GB/device)
+        optimizer = "adafactor"
+        grad_clip = 0.0
+    if arch == "qwen2-vl-72b":
+        opt_dtype = jnp.bfloat16
+    return RunConfig(num_microbatches=micro, optimizer=optimizer,
+                     opt_state_dtype=opt_dtype, grad_clip=grad_clip)

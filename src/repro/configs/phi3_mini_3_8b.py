@@ -1,0 +1,20 @@
+"""phi3-mini-3.8b [dense] — RoPE SwiGLU GQA [arXiv:2404.14219]."""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="phi3-mini-3.8b", family="dense",
+        num_layers=32, d_model=3072, num_heads=32, num_kv_heads=32,
+        d_ff=8192, vocab_size=32064, head_dim=96,
+        attention="gqa", mlp_act="swiglu", rope_theta=10_000.0,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="phi3-mini-3.8b-smoke", family="dense",
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+        d_ff=256, vocab_size=256, head_dim=32,
+        attention="gqa", mlp_act="swiglu",
+    )

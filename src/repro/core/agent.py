@@ -1,0 +1,163 @@
+"""RemoteAgent: master–worker task executor (paper Fig. 3).
+
+The master holds the queue; workers execute tasks on carved communicators.
+Implements the runnability features the brief requires at scale:
+
+* **fault isolation + retry** — a task exception (including simulated
+  ``DeviceFailure``) is contained in its Task; failed devices are removed
+  from the pilot pool and the task retries on a re-carved (possibly
+  smaller) mesh — elastic degradation;
+* **straggler mitigation** — speculative duplicate execution when a task
+  runs past ``straggler_factor x`` the median duration of its tag class;
+  first completion wins;
+* **overhead accounting** — per-task communicator-build / queue / execute
+  timings (reproduces the paper's Table 2 overhead decomposition).
+"""
+from __future__ import annotations
+
+import itertools
+import queue
+import statistics
+import threading
+import time
+import traceback
+from concurrent.futures import ThreadPoolExecutor, Future
+from typing import Dict, List, Optional
+
+from repro.core.pilot import Pilot
+from repro.core.task import DeviceFailure, Task, TaskDescription, TaskState
+
+
+class RemoteAgent:
+    _uid = itertools.count()
+
+    def __init__(self, pilot: Pilot, *, max_workers: int = 4,
+                 straggler_factor: float = 3.0, straggler_min_s: float = 1.0):
+        self.pilot = pilot
+        self.max_workers = max_workers
+        self.straggler_factor = straggler_factor
+        self.straggler_min_s = straggler_min_s
+        self._durations: Dict[str, List[float]] = {}
+        self._pool = ThreadPoolExecutor(max_workers=max_workers,
+                                        thread_name_prefix="rc-worker")
+        self._lock = threading.Lock()
+
+    # -- public --------------------------------------------------------------
+
+    def execute(self, tasks: List[Task]) -> List[Task]:
+        """Run a batch of tasks to completion (respecting device capacity,
+        priority order)."""
+        pending = sorted(tasks, key=lambda t: -t.description.priority)
+        futures: Dict[str, Future] = {}
+        speculative: Dict[str, Future] = {}
+        while pending or futures:
+            # launch whatever fits the free pool
+            still = []
+            launched = False
+            for t in pending:
+                if self._try_launch(t, futures):
+                    launched = True
+                    continue
+                still.append(t)
+            pending = still
+            if pending and not futures and not launched:
+                # nothing runnable and nothing running: pool is dead
+                for t in pending:
+                    t.state = TaskState.FAILED
+                    t.error = "pilot has no alive devices"
+                break
+            done_uids = []
+            for uid, fut in list(futures.items()):
+                t = next(x for x in tasks if x.uid == uid)
+                try:
+                    fut.result(timeout=0.05)
+                    done_uids.append(uid)
+                except TimeoutError:
+                    self._maybe_speculate(t, futures, speculative)
+                except Exception:  # pragma: no cover - result recorded in task
+                    done_uids.append(uid)
+            for uid in done_uids:
+                futures.pop(uid, None)
+                spec = speculative.pop(uid, None)
+                if spec is not None:
+                    spec.cancel()
+            # retries
+            for t in tasks:
+                if (
+                    t.state == TaskState.FAILED
+                    and t.attempts <= t.description.max_retries
+                    and t.uid not in futures
+                ):
+                    t.state = TaskState.PENDING
+                    pending.append(t)
+        return tasks
+
+    def submit(self, descriptions: List[TaskDescription]) -> List[Task]:
+        tasks = [Task(uid=f"task.{next(self._uid):06d}", description=d)
+                 for d in descriptions]
+        return self.execute(tasks)
+
+    # -- internals -------------------------------------------------------------
+
+    def _try_launch(self, task: Task, futures: Dict[str, Future]) -> bool:
+        d = task.description
+        n = min(d.num_devices, max(len(self.pilot.alive_devices()), 1))
+        devices = self.pilot.lease(n, task.uid)
+        if devices is None:
+            return False
+        task.state = TaskState.RUNNING
+        futures[task.uid] = self._pool.submit(self._run_one, task, devices)
+        return True
+
+    def _run_one(self, task: Task, devices) -> None:
+        d = task.description
+        task.attempts += 1
+        task.overhead_s["queue"] = time.time() - task.submitted_at
+        try:
+            t0 = time.time()
+            mesh_shape = d.mesh_shape if d.mesh_shape and len(devices) == _prod(d.mesh_shape) else (len(devices),)
+            mesh_axes = d.mesh_axes if len(mesh_shape) == len(d.mesh_axes) else ("data",)
+            comm = self.pilot.carve(devices, mesh_shape, mesh_axes)
+            task.overhead_s["communicator"] = time.time() - t0
+            task.started_at = time.time()
+            result = d.fn(comm, *d.args)
+            task.finished_at = time.time()
+            with self._lock:
+                if task.state == TaskState.DONE:
+                    return  # a speculative twin won
+                task.result = result
+                task.state = TaskState.DONE
+                self._durations.setdefault(d.kind, []).append(task.duration_s)
+        except DeviceFailure as e:
+            task.finished_at = time.time()
+            self.pilot.mark_failed(e.device_ids)
+            task.error = f"DeviceFailure{e.device_ids}"
+            task.state = TaskState.FAILED
+        except Exception as e:  # noqa: BLE001 — isolation boundary
+            task.finished_at = time.time()
+            task.error = f"{type(e).__name__}: {e}\n{traceback.format_exc()[-1500:]}"
+            task.state = TaskState.FAILED
+        finally:
+            self.pilot.release(task.uid)
+
+    def _maybe_speculate(self, task: Task, futures, speculative) -> None:
+        d = task.description
+        if not d.speculative or task.uid in speculative:
+            return
+        hist = self._durations.get(d.kind, [])
+        if len(hist) < 3 or task.started_at is None:
+            return
+        median = statistics.median(hist)
+        runtime = time.time() - task.started_at
+        if runtime > max(self.straggler_factor * median, self.straggler_min_s):
+            devices = self.pilot.lease(min(d.num_devices, 1), task.uid + ".spec")
+            if devices is None:
+                return
+            speculative[task.uid] = self._pool.submit(self._run_one, task, devices)
+
+
+def _prod(xs):
+    out = 1
+    for x in xs:
+        out *= x
+    return out

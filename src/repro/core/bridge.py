@@ -1,0 +1,51 @@
+"""The Deep RC Bridge (paper Fig. 2): Data Bridge + System Bridge.
+
+* ``data_bridge`` — Cylon GT -> zero-copy loader for the DL framework
+  (repro.bridge.loader).  The GT's device buffers ARE the training input.
+* ``system_bridge`` — wraps a dataframe operation as a pilot task whose
+  output feeds downstream train/infer tasks (resource flow Cylon -> RP).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+from repro.bridge.loader import ZeroCopyLoader
+from repro.core.pipeline import Stage
+from repro.dataframe.table import Table
+
+
+def data_bridge(
+    table: Table,
+    feature_cols: Sequence[str],
+    label_col: str,
+    global_batch: int,
+    **kw,
+) -> ZeroCopyLoader:
+    return ZeroCopyLoader(table, feature_cols, label_col, global_batch, **kw)
+
+
+def cylon_stage(
+    name: str,
+    df_fn: Callable,  # df_fn(comm, upstream) -> Table
+    *,
+    num_devices: int = 1,
+    deps: Sequence[str] = (),
+) -> Stage:
+    """System Bridge: a data-engineering stage running on CPUs (a 1-D
+    worker mesh), producing a GT consumed by DL stages."""
+    return Stage(name=name, fn=df_fn, kind="data_engineering",
+                 num_devices=num_devices, mesh_axes=("data",), deps=deps)
+
+
+def dl_stage(
+    name: str,
+    train_fn: Callable,  # train_fn(comm, upstream) -> result
+    *,
+    num_devices: int = 1,
+    mesh_shape: Optional[tuple] = None,
+    mesh_axes: tuple = ("data",),
+    deps: Sequence[str] = (),
+    kind: str = "train",
+) -> Stage:
+    return Stage(name=name, fn=train_fn, kind=kind, num_devices=num_devices,
+                 mesh_axes=mesh_axes, mesh_shape=mesh_shape, deps=deps)

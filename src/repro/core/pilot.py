@@ -1,0 +1,103 @@
+"""PilotManager / Pilot: resource acquisition (RADICAL-Pilot analogue).
+
+A Pilot owns a pool of accelerator devices acquired once; tasks are
+multiplexed onto slices of the pool without re-acquisition (the pilot
+model's core idea).  Device failure marks devices dead; subsequent carves
+come from survivors (elastic degradation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core.communicator import Communicator, build_communicator
+
+
+@dataclasses.dataclass
+class PilotDescription:
+    num_devices: int = -1  # -1 = all available
+    name: str = "pilot"
+
+
+class Pilot:
+    def __init__(self, uid: str, devices: Sequence):
+        self.uid = uid
+        self._devices = list(devices)
+        self._failed: set = set()
+        self._leased: dict = {}  # device index -> task uid
+        self._lock = threading.Lock()
+        self.created_at = time.time()
+
+    # -- capacity ------------------------------------------------------------
+
+    @property
+    def size(self) -> int:
+        return len(self._devices)
+
+    def alive_devices(self) -> List:
+        return [d for i, d in enumerate(self._devices) if i not in self._failed]
+
+    def free_count(self) -> int:
+        with self._lock:
+            return sum(
+                1 for i in range(len(self._devices))
+                if i not in self._failed and i not in self._leased
+            )
+
+    # -- failure handling ----------------------------------------------------
+
+    def mark_failed(self, device_ids: Sequence[int]) -> None:
+        with self._lock:
+            for d in device_ids:
+                for i, dev in enumerate(self._devices):
+                    if dev.id == d:
+                        self._failed.add(i)
+                        self._leased.pop(i, None)
+
+    # -- leasing -------------------------------------------------------------
+
+    def lease(self, n: int, task_uid: str) -> Optional[List]:
+        """Reserve n alive+free devices for a task (None if unavailable)."""
+        with self._lock:
+            free = [
+                i for i in range(len(self._devices))
+                if i not in self._failed and i not in self._leased
+            ]
+            if len(free) < n:
+                return None
+            take = free[:n]
+            for i in take:
+                self._leased[i] = task_uid
+            return [self._devices[i] for i in take]
+
+    def release(self, task_uid: str) -> None:
+        with self._lock:
+            for i in [i for i, u in self._leased.items() if u == task_uid]:
+                del self._leased[i]
+
+    def carve(self, devices: Sequence, mesh_shape=None,
+              mesh_axes: Tuple[str, ...] = ("data",)) -> Communicator:
+        return build_communicator(devices, mesh_shape, mesh_axes)
+
+
+class PilotManager:
+    """Acquires pilots (cf. radical.pilot.PilotManager)."""
+
+    _uid = itertools.count()
+
+    def __init__(self):
+        self.pilots: List[Pilot] = []
+
+    def submit_pilot(self, desc: PilotDescription) -> Pilot:
+        devices = jax.devices()
+        n = desc.num_devices if desc.num_devices > 0 else len(devices)
+        if n > len(devices):
+            raise RuntimeError(f"requested {n} devices, have {len(devices)}")
+        pilot = Pilot(f"{desc.name}.{next(self._uid):04d}", devices[:n])
+        self.pilots.append(pilot)
+        return pilot

@@ -1,0 +1,88 @@
+"""Deep RC pipelines: preprocess -> train/infer -> postprocess DAGs over
+the pilot runtime (paper Fig. 2/3), plus the multi-pipeline batching mode
+of Table 4 (N pipelines under one pilot)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.core.agent import RemoteAgent
+from repro.core.pilot import Pilot, PilotDescription, PilotManager
+from repro.core.task import Task, TaskDescription, TaskState
+
+
+@dataclasses.dataclass
+class Stage:
+    name: str
+    fn: Callable  # fn(comm, upstream_results, *args)
+    args: tuple = ()
+    kind: str = "generic"
+    num_devices: int = 1
+    mesh_axes: tuple = ("data",)
+    mesh_shape: Optional[tuple] = None
+    deps: Sequence[str] = ()
+
+
+class Pipeline:
+    """A small DAG of stages executed on one RemoteAgent."""
+
+    def __init__(self, name: str, stages: Sequence[Stage]):
+        self.name = name
+        self.stages = list(stages)
+        self.results: Dict[str, Any] = {}
+        self.tasks: Dict[str, Task] = {}
+
+    def run(self, agent: RemoteAgent) -> Dict[str, Any]:
+        done: Dict[str, Any] = {}
+        remaining = list(self.stages)
+        while remaining:
+            ready = [s for s in remaining if all(d in done for d in s.deps)]
+            if not ready:
+                raise RuntimeError(f"pipeline {self.name}: dependency cycle")
+            descs = []
+            for s in ready:
+                upstream = {d: done[d] for d in s.deps}
+
+                def wrap(fn, upstream, args):
+                    return lambda comm: fn(comm, upstream, *args)
+
+                descs.append(TaskDescription(
+                    name=f"{self.name}/{s.name}",
+                    fn=wrap(s.fn, upstream, s.args),
+                    kind=s.kind, num_devices=s.num_devices,
+                    mesh_axes=s.mesh_axes, mesh_shape=s.mesh_shape,
+                ))
+            tasks = agent.submit(descs)
+            for s, t in zip(ready, tasks):
+                self.tasks[s.name] = t
+                if t.state != TaskState.DONE:
+                    raise RuntimeError(
+                        f"pipeline {self.name} stage {s.name} failed: {t.error}"
+                    )
+                done[s.name] = t.result
+            remaining = [s for s in remaining if s not in ready]
+        self.results = done
+        return done
+
+
+def run_pipelines(
+    pipelines: Sequence[Pipeline],
+    *,
+    pilot: Optional[Pilot] = None,
+    max_workers: int = 8,
+) -> Dict[str, Dict[str, Any]]:
+    """Table-4 mode: N pipelines share one pilot/agent (vs N bare-metal
+    runs re-acquiring resources per pipeline)."""
+    own = False
+    if pilot is None:
+        pilot = PilotManager().submit_pilot(PilotDescription())
+        own = True
+    agent = RemoteAgent(pilot, max_workers=max_workers)
+    t0 = time.time()
+    out = {}
+    for p in pipelines:  # stages overlap across pipelines via the agent pool
+        out[p.name] = p.run(agent)
+    wall = time.time() - t0
+    out["_meta"] = {"wall_s": wall, "pilot": pilot.uid, "owned": own}
+    return out

@@ -1,0 +1,74 @@
+"""Task model: the RADICAL-Pilot ``TaskDescription`` analogue.
+
+A task is a Python callable plus a resource request (device count / mesh
+shape).  The RemoteAgent carves a Communicator (mesh slice) matching the
+request and calls ``fn(comm, *args)``.  Tasks carry retry/straggler policy
+— the paper's fault-isolation claim (§2.3) is enforced at this boundary:
+a task failure never propagates outside its Task record.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+
+class TaskState(enum.Enum):
+    PENDING = "pending"
+    RUNNING = "running"
+    DONE = "done"
+    FAILED = "failed"
+    CANCELED = "canceled"
+
+
+@dataclasses.dataclass
+class TaskDescription:
+    """What the user submits (cf. radical.pilot.TaskDescription)."""
+
+    name: str
+    fn: Callable  # fn(comm, *args) -> result
+    args: Tuple = ()
+    kind: str = "generic"  # data_engineering | train | inference | generic
+    # resource request
+    num_devices: int = 1
+    mesh_axes: Tuple[str, ...] = ("data",)
+    mesh_shape: Optional[Tuple[int, ...]] = None  # default: (num_devices,)
+    # policy
+    max_retries: int = 2
+    priority: int = 0
+    timeout_s: Optional[float] = None
+    speculative: bool = True  # eligible for straggler duplicate execution
+    tags: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class Task:
+    uid: str
+    description: TaskDescription
+    state: TaskState = TaskState.PENDING
+    result: Any = None
+    error: Optional[str] = None
+    attempts: int = 0
+    submitted_at: float = dataclasses.field(default_factory=time.time)
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    # overhead decomposition (the paper's Table 2 metric)
+    overhead_s: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def duration_s(self) -> Optional[float]:
+        if self.started_at is None or self.finished_at is None:
+            return None
+        return self.finished_at - self.started_at
+
+    def done(self) -> bool:
+        return self.state in (TaskState.DONE, TaskState.FAILED, TaskState.CANCELED)
+
+
+class DeviceFailure(RuntimeError):
+    """Simulated node/device loss (tests + chaos benchmarks inject this)."""
+
+    def __init__(self, device_ids, msg="device failure"):
+        super().__init__(msg)
+        self.device_ids = tuple(device_ids)

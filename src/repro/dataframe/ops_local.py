@@ -1,0 +1,95 @@
+"""Local (per-shard) dataframe operators: the jnp analogue of Cylon's local
+operator set.  All mask-aware and static-shape."""
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_KNUTH = jnp.uint32(2654435761)
+
+
+def hash_u32(keys: jnp.ndarray) -> jnp.ndarray:
+    """Multiplicative hash of integer keys -> uint32."""
+    k = keys.astype(jnp.uint32)
+    h = k * _KNUTH
+    h ^= h >> 16
+    return h
+
+
+def filter_rows(columns: Dict, valid: jnp.ndarray, mask: jnp.ndarray):
+    """Logical filter: rows stay in place, validity shrinks (static shape)."""
+    return columns, valid & mask
+
+
+def sort_by_key(columns: Dict, valid: jnp.ndarray, key: str, *, descending=False):
+    """Local sort by key; invalid rows sort to the end (stable)."""
+    keys = columns[key]
+    big = jnp.iinfo(keys.dtype).max if jnp.issubdtype(keys.dtype, jnp.integer) else jnp.inf
+    eff = jnp.where(valid, keys, big)
+    if descending:
+        eff = jnp.where(valid, -keys, big)
+    order = jnp.argsort(eff, stable=True)
+    cols = {k: jnp.take(v, order, axis=0) for k, v in columns.items()}
+    return cols, jnp.take(valid, order)
+
+
+def compact(columns: Dict, valid: jnp.ndarray):
+    """Move valid rows to the front (stable), keep capacity."""
+    order = jnp.argsort(~valid, stable=True)
+    cols = {k: jnp.take(v, order, axis=0) for k, v in columns.items()}
+    return cols, jnp.take(valid, order)
+
+
+def local_groupby_sum(columns: Dict, valid: jnp.ndarray, key: str,
+                      value_cols: Sequence[str], num_groups_cap: int):
+    """Group-by-key sum into fixed slots (keys assumed pre-partitioned so
+    equal keys are co-located).  Sort-based segmenting — exact, no hash
+    collisions; distinct keys beyond ``num_groups_cap`` are dropped."""
+    cols, valid = sort_by_key(columns, valid, key)
+    keys = cols[key]
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), keys[1:] != keys[:-1]]
+    ) & valid
+    seg = jnp.cumsum(first.astype(jnp.int32)) - 1  # group index per row
+    seg = jnp.where(valid & (seg < num_groups_cap), seg, num_groups_cap)
+    out = {}
+    for c in value_cols:
+        v = jnp.where(valid, cols[c], 0)
+        out[c] = jax.ops.segment_sum(v, seg, num_segments=num_groups_cap + 1)[:-1]
+    key_of_slot = (
+        jnp.zeros((num_groups_cap + 1,), keys.dtype)
+        .at[seg].max(jnp.where(valid, keys, 0), mode="drop")[:-1]
+    )
+    count = jax.ops.segment_sum(valid.astype(jnp.int32), seg,
+                                num_segments=num_groups_cap + 1)[:-1]
+    return key_of_slot, out, count
+
+
+def local_hash_join(
+    left_cols: Dict, left_valid: jnp.ndarray,
+    right_cols: Dict, right_valid: jnp.ndarray,
+    key: str, suffix: str = "_r",
+) -> Tuple[Dict, jnp.ndarray]:
+    """Inner equality join; right side treated as a (deduplicated) build
+    side — each left row matches at most one right row (first by key order),
+    the common case for the paper's feature-table joins.  Output capacity ==
+    left capacity (static)."""
+    lk = left_cols[key]
+    rk = right_cols[key]
+    big = jnp.iinfo(rk.dtype).max
+    rk_eff = jnp.where(right_valid, rk, big)
+    order = jnp.argsort(rk_eff)
+    rk_sorted = jnp.take(rk_eff, order)
+    pos = jnp.searchsorted(rk_sorted, lk)
+    pos = jnp.clip(pos, 0, rk_sorted.shape[0] - 1)
+    match = (jnp.take(rk_sorted, pos) == lk) & left_valid
+    ridx = jnp.take(order, pos)
+    out = dict(left_cols)
+    for k, v in right_cols.items():
+        if k == key:
+            continue
+        name = k if k not in left_cols else k + suffix
+        out[name] = jnp.take(v, ridx, axis=0)
+    return out, match

@@ -1,0 +1,104 @@
+"""Cylon-analogue distributed columnar Table.
+
+A :class:`Table` is a dict of equal-length jnp columns plus a ``valid`` row
+mask.  Distribution model (the TPU-native re-founding of Cylon's
+rank-partitioned Arrow tables — see DESIGN.md §2):
+
+* every shard (mesh slice along ``axis``, default ``"data"``) owns a
+  fixed-capacity partition of rows;
+* ragged partitions are expressed as ``valid`` masks over the fixed
+  capacity (XLA needs static shapes);
+* distributed operators (:mod:`repro.dataframe.ops_dist`) exchange rows
+  with ``shard_map`` + ``all_to_all`` / ``psum`` — the role MPI/GLOO/UCX
+  play in Cylon.
+
+The Global Table (GT) of the paper == a Table whose columns are jax global
+arrays sharded over the mesh; "zero-copy" handoff to DL training is a
+compiled gather on those same buffers (bridge/loader.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class Table:
+    columns: Dict[str, jnp.ndarray]
+    valid: jnp.ndarray  # bool [N]
+    mesh: Optional[Mesh] = None
+    axis: str = "data"
+
+    # -- construction -------------------------------------------------------
+
+    @staticmethod
+    def from_columns(columns: Dict[str, Any], mesh: Optional[Mesh] = None,
+                     axis: str = "data", valid=None) -> "Table":
+        cols = {k: jnp.asarray(v) for k, v in columns.items()}
+        n = next(iter(cols.values())).shape[0]
+        for k, v in cols.items():
+            if v.shape[0] != n:
+                raise ValueError(f"column {k} length {v.shape[0]} != {n}")
+        if valid is None:
+            valid = jnp.ones((n,), bool)
+        t = Table(cols, jnp.asarray(valid, bool), mesh, axis)
+        if mesh is not None:
+            t = t.reshard(mesh, axis)
+        return t
+
+    def reshard(self, mesh: Mesh, axis: str = "data") -> "Table":
+        """Distribute rows over the mesh axis (pads to divisibility)."""
+        size = mesh.shape[axis]
+        n = self.num_rows
+        pad = (-n) % size
+
+        def place(c):
+            if pad:
+                padding = [(0, pad)] + [(0, 0)] * (c.ndim - 1)
+                c = jnp.pad(c, padding)
+            spec = P(axis, *([None] * (c.ndim - 1)))
+            return jax.device_put(c, NamedSharding(mesh, spec))
+
+        cols = {k: place(v) for k, v in self.columns.items()}
+        valid = place(self.valid if not pad else self.valid)
+        if pad:
+            valid = place(jnp.pad(self.valid, (0, pad), constant_values=False))
+        return Table(cols, valid, mesh, axis)
+
+    # -- basics --------------------------------------------------------------
+
+    @property
+    def num_rows(self) -> int:
+        return int(self.valid.shape[0])
+
+    @property
+    def num_valid(self) -> int:
+        return int(jnp.sum(self.valid))
+
+    @property
+    def column_names(self):
+        return list(self.columns)
+
+    def col(self, name: str) -> jnp.ndarray:
+        return self.columns[name]
+
+    def with_columns(self, columns, valid=None) -> "Table":
+        return Table(dict(columns), self.valid if valid is None else valid,
+                     self.mesh, self.axis)
+
+    def project(self, names: Sequence[str]) -> "Table":
+        return self.with_columns({k: self.columns[k] for k in names})
+
+    def to_numpy(self) -> Dict[str, np.ndarray]:
+        """Gather valid rows to host (postprocessing / tests)."""
+        mask = np.asarray(self.valid)
+        return {k: np.asarray(v)[mask] for k, v in self.columns.items()}
+
+    def head(self, n: int = 5) -> Dict[str, np.ndarray]:
+        data = self.to_numpy()
+        return {k: v[:n] for k, v in data.items()}

@@ -1,0 +1,574 @@
+"""Trip-count-aware cost analysis over compiled HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body **once**, so any model
+using scan-over-layers (all of ours) would under-report FLOPs/bytes by ~L x.
+This module re-derives the three roofline inputs by parsing the optimized,
+SPMD-partitioned HLO text (``compiled.as_text()``):
+
+* ``flops``            — dot / convolution FLOPs (+1 FLOP per element of
+                         elementwise fusions), with while bodies multiplied by
+                         their statically-known trip count;
+* ``bytes``            — HBM-traffic proxy: sum of (operand + output) bytes of
+                         materializing instructions (fusion/dot/conv/copy/
+                         collective), trip-count scaled;
+* ``collective_bytes`` — per collective kind (all-gather, all-reduce,
+                         reduce-scatter, all-to-all, collective-permute), sum
+                         of operand bytes, trip-count scaled.
+
+All numbers are **per device** (the compiled module is the per-device SPMD
+program).  The roofline layer multiplies by chip count where totals are
+needed.  This is a static analysis of an XLA:CPU-optimized module standing in
+for the TPU compile — fusion decisions differ, which we note in
+EXPERIMENTS.md; dot/collective placement (what the roofline feeds on) is
+decided by SPMD partitioning, which is shared infrastructure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """Bytes of a (possibly tuple) shape string."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_elems(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dims = m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def _first_shape_dims(shape_str: str) -> Tuple[int, ...]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return ()
+    dims = m.group(2)
+    return tuple(int(d) for d in dims.split(",")) if dims else ()
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    shape: str          # full result type string
+    opcode: str
+    operands: List[str]
+    attrs: str          # raw trailing text (attributes)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: Dict[str, Instruction]
+    order: List[str]
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    per_collective: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_count: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, other: "Cost") -> "Cost":
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.collective_bytes += other.collective_bytes
+        for k, v in other.per_collective.items():
+            self.per_collective[k] = self.per_collective.get(k, 0.0) + v
+        for k, v in other.collective_count.items():
+            self.collective_count[k] = self.collective_count.get(k, 0) + v
+        return self
+
+    def scaled(self, factor: float) -> "Cost":
+        return Cost(
+            self.flops * factor,
+            self.bytes * factor,
+            self.collective_bytes * factor,
+            {k: v * factor for k, v in self.per_collective.items()},
+            {k: int(v * factor) for k, v in self.collective_count.items()},
+        )
+
+
+# ---------------------------------------------------------------------------
+# Parsing
+# ---------------------------------------------------------------------------
+
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^=]*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\((.*)$"
+)
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)=\{?%?([\w.\-]+)")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    comment_re = re.compile(r"/\*.*?\*/")
+    for raw in text.splitlines():
+        line = comment_re.sub("", raw).rstrip()
+        if cur is None:
+            m = _COMP_HEADER_RE.match(line.strip())
+            if m and "{" in line:
+                cur = Computation(m.group(2), {}, [])
+                if m.group(1):
+                    entry = m.group(2)
+            continue
+        if line.startswith("}") or line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape, opcode, rest = m.groups()
+        # operand section = up to matching paren at depth 0
+        depth = 1
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_str, attrs = rest[:end], rest[end + 1:]
+        operands = _OPERAND_RE.findall(operand_str)
+        if opcode == "parameter":
+            # keep the parameter index recoverable (operand text is "N")
+            attrs = f"param_index={operand_str.strip()} " + attrs
+        inst = Instruction(name, shape, opcode, operands, attrs)
+        cur.instructions[name] = inst
+        cur.order.append(name)
+    return comps, entry
+
+
+# ---------------------------------------------------------------------------
+# FLOP formulas
+# ---------------------------------------------------------------------------
+
+
+def _dot_flops(inst: Instruction, comp: Computation) -> float:
+    out_elems = _shape_elems(inst.shape)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", inst.attrs)
+    if not m or not inst.operands:
+        return 2.0 * out_elems  # degenerate
+    lhs = comp.instructions.get(inst.operands[0])
+    if lhs is None:
+        return 2.0 * out_elems
+    lhs_dims = _first_shape_dims(lhs.shape)
+    k = 1
+    for d in m.group(1).split(","):
+        if d != "" and int(d) < len(lhs_dims):
+            k *= lhs_dims[int(d)]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(inst: Instruction, comp: Computation) -> float:
+    out_elems = _shape_elems(inst.shape)
+    if len(inst.operands) < 2:
+        return 2.0 * out_elems
+    rhs = comp.instructions.get(inst.operands[1])
+    if rhs is None:
+        return 2.0 * out_elems
+    k_dims = _first_shape_dims(rhs.shape)
+    # kernel = spatial... x in_ch x out_ch (whatever the layout: total / out_ch
+    # upper-bounds the per-output work; use total elems / largest dim as proxy)
+    k_elems = 1
+    for d in k_dims:
+        k_elems *= d
+    out_ch = max(k_dims) if k_dims else 1
+    return 2.0 * out_elems * max(k_elems // max(out_ch, 1), 1)
+
+
+_MATERIALIZING = {
+    "fusion", "dot", "convolution", "copy", "transpose", "reduce", "sort",
+    "scatter", "gather", "dynamic-slice", "dynamic-update-slice", "select",
+    "broadcast", "iota", "rng", "pad", "concatenate", "reverse", "slice",
+    "convert", "add", "multiply", "subtract", "divide", "exponential",
+    "tanh", "rsqrt", "maximum", "minimum", "compare",
+} | set(_COLLECTIVES)
+
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+               "after-all", "partition-id", "replica-id"}
+
+
+# ---------------------------------------------------------------------------
+# Evaluation with trip counts
+# ---------------------------------------------------------------------------
+
+
+# operands that are while-loop-invariant and at most this size are modeled
+# as VMEM-resident across iterations (charged once, not per trip) — TPU v5e
+# has 128 MB VMEM; 16 MB per pinned operand is conservative.
+VMEM_RESIDENT_BYTES = 16 * 1024 * 1024
+
+
+class ModuleCost:
+    def __init__(self, text: str):
+        self.text = text
+        self.comps, self.entry_name = parse_module(text)
+        self._const_vals = self._parse_constants(text)
+        self._memo: Dict[Tuple[str, frozenset], Cost] = {}
+        self.unknown_trip_loops = 0
+
+    def _invariant_resident_gtes(self, body_name: str) -> frozenset:
+        """GTE instructions in a while body that (a) pass through the loop
+        unchanged (root tuple returns them as-is) and (b) are small enough
+        to stay VMEM-resident."""
+        body = self.comps.get(body_name)
+        if body is None or not body.order:
+            return frozenset()
+        root = body.instructions[body.order[-1]]
+        if root.opcode != "tuple":
+            return frozenset()
+        gte_index = {}
+        for name in body.order:
+            inst = body.instructions[name]
+            if inst.opcode == "get-tuple-element":
+                m = re.search(r"index=(\d+)", inst.attrs)
+                if m:
+                    gte_index[name] = int(m.group(1))
+        resident = set()
+        for pos, operand in enumerate(root.operands):
+            if gte_index.get(operand) == pos:
+                inst = body.instructions[operand]
+                if _shape_bytes(inst.shape) <= VMEM_RESIDENT_BYTES:
+                    resident.add(operand)
+        return frozenset(resident)
+
+    @staticmethod
+    def _parse_constants(text: str) -> Dict[str, int]:
+        """Map computation-qualified constant names -> integer values."""
+        vals: Dict[str, int] = {}
+        for m in re.finditer(r"%([\w.\-]+)\s*=\s*s32\[\]\s*constant\((-?\d+)\)", text):
+            vals[m.group(1)] = int(m.group(2))
+        return vals
+
+    def _while_trip(self, cond_name: str) -> int:
+        cond = self.comps.get(cond_name)
+        if cond is None:
+            return 1
+        # scan pattern: ROOT compare(iter, K) (possibly via a wrapped fusion).
+        # Prefer constants feeding the root; fall back to any s32 constant.
+        root = cond.instructions.get(cond.order[-1]) if cond.order else None
+        if root is not None:
+            for o in root.operands:
+                if o in self._const_vals and self._const_vals[o] > 0:
+                    return self._const_vals[o]
+        for name in cond.order:
+            if name in self._const_vals and self._const_vals[name] > 0:
+                return self._const_vals[name]
+        self.unknown_trip_loops += 1
+        return 1
+
+    def comp_cost(self, comp_name: str, resident: frozenset = frozenset()) -> Cost:
+        key = (comp_name, resident)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(comp_name)
+        total = Cost()
+        if comp is None:
+            self._memo[key] = total
+            return total
+        self._memo[key] = total  # guard cycles
+        for name in comp.order:
+            inst = comp.instructions[name]
+            op = inst.opcode
+            if op == "while":
+                m = re.search(r"condition=%?([\w.\-]+)", inst.attrs)
+                b = re.search(r"body=%?([\w.\-]+)", inst.attrs)
+                trips = self._while_trip(m.group(1)) if m else 1
+                if b:
+                    body_name = b.group(1)
+                    res = self._invariant_resident_gtes(body_name)
+                    body_cost = self.comp_cost(body_name, res)
+                    total += body_cost.scaled(trips)
+                    if res:
+                        # charge the resident operands' HBM read once
+                        body = self.comps[body_name]
+                        once = sum(_shape_bytes(body.instructions[n].shape)
+                                   for n in res)
+                        total += Cost(bytes=once)
+                continue
+            if op == "conditional":
+                branches = re.findall(r"%([\w.\-]+)", inst.attrs)
+                best = Cost()
+                for br in branches:
+                    c = self.comp_cost(br)
+                    if c.flops + c.bytes >= best.flops + best.bytes:
+                        best = c
+                total += best
+                continue
+            if op in ("call", "async-start", "async-done"):
+                m = _CALLS_RE.search(inst.attrs)
+                if m:
+                    total += self.comp_cost(m.group(1))
+                continue
+            if op == "fusion":
+                m = _CALLS_RE.search(inst.attrs)
+                inner = self.comp_cost(m.group(1)) if m else Cost()
+                c = Cost()
+                c.flops = inner.flops if inner.flops > 0 else float(_shape_elems(inst.shape))
+                c.bytes = self._io_bytes(inst, comp, resident)
+                total += c
+                continue
+            if op == "dot":
+                c = Cost(flops=_dot_flops(inst, comp), bytes=self._io_bytes(inst, comp, resident))
+                total += c
+                continue
+            if op == "convolution":
+                c = Cost(flops=_conv_flops(inst, comp), bytes=self._io_bytes(inst, comp, resident))
+                total += c
+                continue
+            if op in _COLLECTIVES:
+                opb = self._operand_bytes(inst, comp, resident)
+                c = Cost(bytes=self._io_bytes(inst, comp, resident), collective_bytes=opb)
+                c.per_collective[op] = opb
+                c.collective_count[op] = 1
+                total += c
+                continue
+            if op in _SKIP_BYTES:
+                continue
+            if op in _MATERIALIZING:
+                total += Cost(
+                    flops=float(_shape_elems(inst.shape)),
+                    bytes=self._io_bytes(inst, comp, resident),
+                )
+        self._memo[key] = total
+        return total
+
+    def _operand_bytes(self, inst: Instruction, comp: Computation,
+                       resident: frozenset = frozenset()) -> float:
+        b = 0.0
+        for o in inst.operands:
+            if o in resident:
+                continue
+            src = comp.instructions.get(o)
+            if src is not None:
+                b += _shape_bytes(src.shape)
+        return b
+
+    def _io_bytes(self, inst: Instruction, comp: Computation,
+                  resident: frozenset = frozenset()) -> float:
+        """HBM traffic of one instruction.  Sliced accesses are charged at
+        the slice size, not the full buffer — a scan body dynamic-slicing
+        one layer out of [L, ...] stacked weights reads one layer, and a
+        cache update writes one position (TPU aliases DUS in place)."""
+        op = inst.opcode
+        out_b = _shape_bytes(inst.shape)
+        if op == "dynamic-slice" or op == "slice":
+            return 2.0 * out_b  # read slice + write result
+        if op == "dynamic-update-slice":
+            upd = comp.instructions.get(inst.operands[1]) if len(inst.operands) > 1 else None
+            ub = _shape_bytes(upd.shape) if upd is not None else out_b
+            return 2.0 * ub  # read-modify-write of the updated region
+        if op == "fusion":
+            return self._fusion_io_bytes(inst, comp, resident)
+        return out_b + self._operand_bytes(inst, comp, resident)
+
+    def _fusion_io_bytes(self, inst: Instruction, comp: Computation,
+                         resident: frozenset) -> float:
+        """Fusion operands whose every use inside the fused computation is a
+        (dynamic-)slice are charged at the slice size."""
+        m = _CALLS_RE.search(inst.attrs)
+        inner = self.comps.get(m.group(1)) if m else None
+        out_b = _shape_bytes(inst.shape)
+        if inner is None:
+            return out_b + self._operand_bytes(inst, comp, resident)
+        # fusion operand position i corresponds to inner parameter(i)
+        by_index: Dict[int, str] = {}
+        for n in inner.order:
+            ii = inner.instructions[n]
+            if ii.opcode == "parameter":
+                mm = re.search(r"param_index=(\d+)", ii.attrs)
+                if mm:
+                    by_index[int(mm.group(1))] = n
+        params_in_order = [by_index[i] for i in sorted(by_index)]
+        total = out_b
+        # in-place update pattern: the fusion contains a DUS on a buffer
+        # parameter and returns the (possibly convert-wrapped) buffer — TPU
+        # aliases it, so charge the updated region, not the whole stack
+        dus_updates = 0.0
+        has_buffer_dus = False
+        for n in inner.order:
+            ii = inner.instructions[n]
+            if ii.opcode == "dynamic-update-slice" and len(ii.operands) > 1:
+                upd = inner.instructions.get(ii.operands[1])
+                if upd is not None and _shape_bytes(upd.shape) < out_b:
+                    dus_updates += _shape_bytes(upd.shape)
+                    has_buffer_dus = True
+        if has_buffer_dus and dus_updates < out_b:
+            total = 2.0 * dus_updates
+        for pos, o in enumerate(inst.operands):
+            if o in resident:
+                continue
+            src = comp.instructions.get(o)
+            if src is None:
+                continue
+            full = _shape_bytes(src.shape)
+            eff = full
+            if pos < len(params_in_order):
+                pname = params_in_order[pos]
+                uses = [inner.instructions[n] for n in inner.order
+                        if pname in inner.instructions[n].operands]
+                if uses and all(u.opcode in ("dynamic-slice", "slice") or
+                                (u.opcode == "dynamic-update-slice" and
+                                 u.operands and u.operands[0] == pname)
+                                for u in uses):
+                    eff = 0.0
+                    for u in uses:
+                        if u.opcode in ("dynamic-slice", "slice"):
+                            eff += _shape_bytes(u.shape)
+                        else:
+                            upd = inner.instructions.get(u.operands[1]) if len(u.operands) > 1 else None
+                            eff += _shape_bytes(upd.shape) if upd is not None else 0.0
+                    eff = min(eff, full)
+            total += eff
+        return total
+
+    def entry_cost(self) -> Cost:
+        if self.entry_name and self.entry_name in self.comps:
+            return self.comp_cost(self.entry_name)
+        # fallback: the computation not referenced by any other
+        referenced: set = set()
+        for comp in self.comps.values():
+            for inst in comp.instructions.values():
+                referenced.update(_CALLS_RE.findall(inst.attrs))
+        best = Cost()
+        for n in self.comps:
+            if n in referenced or n.startswith(("fused", "wrapped", "region")):
+                continue
+            c = self.comp_cost(n)
+            if c.flops + c.bytes > best.flops + best.bytes:
+                best = c
+        return best
+
+
+def top_bytes_contributors(text: str, k: int = 25) -> List[str]:
+    """The §Perf profiler: instructions ranked by trip-scaled HBM bytes.
+    Walks the call graph accumulating a per-instruction multiplier."""
+    mc = ModuleCost(text)
+    rows: List[Tuple[float, str]] = []
+
+    def walk(comp_name: str, mult: float, resident: frozenset):
+        comp = mc.comps.get(comp_name)
+        if comp is None or mult <= 0:
+            return
+        for name in comp.order:
+            inst = comp.instructions[name]
+            op = inst.opcode
+            if op == "while":
+                m = re.search(r"condition=%?([\w.\-]+)", inst.attrs)
+                b = re.search(r"body=%?([\w.\-]+)", inst.attrs)
+                trips = mc._while_trip(m.group(1)) if m else 1
+                if b:
+                    res = mc._invariant_resident_gtes(b.group(1))
+                    walk(b.group(1), mult * trips, res)
+                continue
+            if op in ("call",):
+                m = _CALLS_RE.search(inst.attrs)
+                if m:
+                    walk(m.group(1), mult, frozenset())
+                continue
+            if op in _SKIP_BYTES or op == "conditional":
+                continue
+            if op in _MATERIALIZING:
+                by = mc._io_bytes(inst, comp, resident) * mult
+                if by > 0:
+                    opn = re.search(r'op_name="([^"]+)"', inst.attrs)
+                    tag = opn.group(1)[-70:] if opn else name
+                    rows.append((by, f"{op:22s} {inst.shape[:40]:40s} x{mult:<6.0f} {tag}"))
+
+    entry = mc.entry_name or next(iter(mc.comps))
+    walk(entry, 1.0, frozenset())
+    rows.sort(reverse=True)
+    return [f"{b/1e9:9.2f} GB  {s}" for b, s in rows[:k]]
+
+
+def analyze(text: str) -> dict:
+    mc = ModuleCost(text)
+    c = mc.entry_cost()
+    return {
+        "flops_per_device": c.flops,
+        "bytes_per_device": c.bytes,
+        "collective_bytes_per_device": c.collective_bytes,
+        "per_collective_bytes": dict(sorted(c.per_collective.items())),
+        "collective_counts": dict(sorted(c.collective_count.items())),
+        "unknown_trip_loops": mc.unknown_trip_loops,
+    }
+
+
+def cpu_f32_dup_bytes(text: str, min_bytes: float = 6.4e7) -> float:
+    """XLA:CPU has no native bf16 dots; float-normalization inserts
+    module-level f32 copies of large bf16 buffers (e.g. the whole stacked
+    KV cache), which a TPU compile would not allocate.  Returns the bytes
+    of distinct big f32 convert-outputs that shape-match an existing bf16
+    buffer, so the dry-run can report a TPU-adjusted memory figure."""
+    f32_converts = set()
+    for m in re.finditer(r"=\s*f32\[([0-9,]+)\]\{[^}]*\}\s*convert\(", text):
+        dims = m.group(1)
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        if n * 4 >= min_bytes:
+            f32_converts.add(dims)
+    total = 0.0
+    for dims in f32_converts:
+        if re.search(r"bf16\[" + re.escape(dims) + r"\]", text):
+            n = 1
+            for d in dims.split(","):
+                n *= int(d)
+            total += n * 4
+    return total
+
+
+def collective_schedule(text: str, limit: int = 40) -> List[str]:
+    """Human-readable list of collectives (kind, shape, op_name source)."""
+    out = []
+    for line in text.splitlines():
+        s = line.strip()
+        if s.startswith("%") and any(f"= {k}" in s or f" {k}(" in s for k in _COLLECTIVES):
+            m = re.match(r"%[\w.\-]+\s*=\s*(\S+)\s+([\w\-]+)\(", s)
+            opn = re.search(r'op_name="([^"]+)"', s)
+            if m:
+                out.append(f"{m.group(2)} {m.group(1)}" + (f"  <- {opn.group(1)[:80]}" if opn else ""))
+        if len(out) >= limit:
+            out.append("... (truncated)")
+            break
+    return out

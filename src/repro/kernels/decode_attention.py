@@ -1,0 +1,104 @@
+"""Flash-decoding (split-K) GQA decode attention — Pallas TPU kernel.
+
+FlashDecoding (arXiv:2311.01282) splits the KV cache across the grid so a
+single query token saturates the chip: each program reduces one KV span
+into a partial (max, denom, weighted-V) triple; a cheap jnp combine merges
+the partials.  GPU→TPU adaptation: per-SM split-K becomes grid programs
+over VMEM-resident cache tiles; the GQA head group is packed into one MXU
+matmul ([G, D] x [D, block_k]) instead of warp-level broadcast.
+
+Layout: q [B, H, D]; k, v [B, KV, S, D]; cache_len scalar int32.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _dec_kernel(len_ref, q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref, *,
+                scale: float, block_k: int):
+    sj = pl.program_id(1)
+    q = q_ref[0, ...].astype(jnp.float32)          # [G, D]
+    k = k_ref[0, ...].astype(jnp.float32)          # [bk, D]
+    v = v_ref[0, ...].astype(jnp.float32)          # [bk, D]
+    cache_len = len_ref[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                      # [G, bk]
+    kpos = sj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < cache_len, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)         # [G, 1]
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    acc = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                              # [G, D]
+    m_ref[0, 0, ...] = m
+    l_ref[0, 0, ...] = l
+    acc_ref[0, 0, ...] = acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_k", "interpret")
+)
+def decode_attention(
+    q: jnp.ndarray,        # [B, H, D]
+    k: jnp.ndarray,        # [B, KV, S, D]
+    v: jnp.ndarray,
+    cache_len: jnp.ndarray,  # [] int32
+    *,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, D = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    block_k = min(block_k, S)
+    ns = S // block_k
+    grid = (B * KV, ns)
+
+    q_r = q.reshape(B, KV, G, D).reshape(B * KV, G, D)
+    k_r = k.reshape(B * KV, S, D)
+    v_r = v.reshape(B * KV, S, D)
+    clen = jnp.broadcast_to(cache_len, (1,)).astype(jnp.int32)
+
+    m_p, l_p, acc_p = pl.pallas_call(
+        functools.partial(_dec_kernel, scale=scale, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.MemorySpace.ANY),
+            pl.BlockSpec((1, G, D), lambda bh, sj: (bh, 0, 0)),
+            pl.BlockSpec((1, block_k, D), lambda bh, sj: (bh, sj, 0)),
+            pl.BlockSpec((1, block_k, D), lambda bh, sj: (bh, sj, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, 1), lambda bh, sj: (bh, sj, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda bh, sj: (bh, sj, 0, 0)),
+            pl.BlockSpec((1, 1, G, D), lambda bh, sj: (bh, sj, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * KV, ns, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B * KV, ns, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B * KV, ns, G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(clen, q_r, k_r, v_r)
+
+    # cross-split combine (tiny: [B*KV, ns, G, ...])
+    m_all = jnp.max(m_p, axis=1, keepdims=True)
+    w = jnp.exp(m_p - m_all)
+    l_tot = jnp.sum(l_p * w, axis=1)
+    acc = jnp.sum(acc_p * w, axis=1)
+    out = acc / jnp.maximum(l_tot, 1e-30)
+    return out.reshape(B, KV * G, D).astype(q.dtype)
+
+
+def _dec_kernel_shapes():  # for docs/tests
+    return dict(block_k=512)

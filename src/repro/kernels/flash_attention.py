@@ -1,0 +1,128 @@
+"""Causal GQA flash-attention forward — Pallas TPU kernel.
+
+TPU adaptation of FlashAttention (arXiv:2205.14135): the CUDA version's
+shared-memory tiling + warp reductions become VMEM BlockSpec tiles + VPU
+reductions, with the MXU fed (block_q x head_dim) x (head_dim x block_k)
+tiles (128-aligned).  The sequential minor grid dimension carries the
+running-softmax state in VMEM scratch across KV blocks — the idiomatic
+Pallas streaming pattern (grid minor dim iterates in order on TPU).
+
+Layout: q [B, H, S, D]; k, v [B, KV, S, D] (GQA: H = KV * G — the kernel
+maps query head h to kv head h // G via the BlockSpec index_map, so KV is
+never materialized at H width).  Causal masking skips fully-masked KV
+blocks (``pl.when``) — the compiled FLOPs follow the causal triangle.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, block_q: int, block_k: int, causal: bool):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = (qi * block_q + block_q - 1 >= kj * block_k) if causal else True
+
+    @pl.when(run if causal else (kj >= 0))
+    def _compute():
+        q = q_ref[0, ...].astype(jnp.float32)  # [bq, D]
+        k = k_ref[0, ...].astype(jnp.float32)  # [bk, D]
+        v = v_ref[0, ...].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # [bq, bk]
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, ...] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jnp.ndarray,  # [B, H, S, D]
+    k: jnp.ndarray,  # [B, KV, S, D]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    nq = S // block_q
+    nk = S // block_k
+    grid = (B * H, nq, nk)
+
+    def q_map(bh, qi, kj):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, kj):
+        b, h = bh // H, bh % H
+        return (b * KV + h // G, kj, 0)
+
+    q_r = q.reshape(B * H, S, D)
+    k_r = k.reshape(B * KV, S, D)
+    v_r = v.reshape(B * KV, S, D)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _fa_kernel, scale=scale, block_q=block_q, block_k=block_k,
+            causal=causal,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), q_map),
+            pl.BlockSpec((1, block_k, D), kv_map),
+            pl.BlockSpec((1, block_k, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom
+            pltpu.VMEM((block_q, D), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q_r, k_r, v_r)
+    return out.reshape(B, H, S, D)

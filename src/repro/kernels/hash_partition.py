@@ -1,0 +1,86 @@
+"""Hash-partition histogram — Pallas TPU kernel (the dataframe shuffle's
+partition step).
+
+Cylon's radix partition is a CPU cache-conscious two-pass algorithm
+(histogram, then scatter).  TPU adaptation: pass 1 (this kernel) computes
+per-block bucket histograms fully vectorized — each program hashes a
+[block] tile of keys in VMEM and accumulates `sum(bucket == p)` compare-
+reduces on the VPU, writing a [P] histogram row.  Pass 2 (prefix sums +
+gather reorder) stays in jnp: XLA already emits optimal cumsum/gather, and
+TPU has no scatter unit a kernel could beat.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_KNUTH = 2654435761
+
+
+def _hash(keys: jnp.ndarray) -> jnp.ndarray:
+    k = keys.astype(jnp.uint32)
+    h = k * jnp.uint32(_KNUTH)
+    h = h ^ (h >> 16)
+    return h
+
+
+def _hist_kernel(keys_ref, hist_ref, *, num_buckets: int):
+    keys = keys_ref[...]
+    bucket = (_hash(keys) % jnp.uint32(num_buckets)).astype(jnp.int32)
+    # vectorized per-bucket compare-reduce: [block] -> [P]
+    pids = jax.lax.broadcasted_iota(jnp.int32, (num_buckets, keys.shape[0]), 0)
+    hist = jnp.sum((bucket[None, :] == pids).astype(jnp.int32), axis=1)
+    hist_ref[0, ...] = hist
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_buckets", "block", "interpret")
+)
+def hash_partition_histogram(
+    keys: jnp.ndarray,  # [N] int
+    *,
+    num_buckets: int,
+    block: int = 2048,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """-> [num_blocks, num_buckets] per-block histograms (pass 1).
+
+    ``jnp.cumsum`` over the flattened result gives scatter offsets; the
+    caller reorders with a gather (see repro.dataframe.partition)."""
+    n = keys.shape[0]
+    block = min(block, n)
+    pad = (-n) % block
+    k2 = jnp.pad(keys, (0, pad), constant_values=-1) if pad else keys
+    # padded keys hash somewhere; subtract them from the last block after
+    nb = k2.shape[0] // block
+    hist = pl.pallas_call(
+        functools.partial(_hist_kernel, num_buckets=num_buckets),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1, num_buckets), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, num_buckets), jnp.int32),
+        interpret=interpret,
+    )(k2)
+    if pad:
+        pad_bucket = (_hash(jnp.full((pad,), -1)) % jnp.uint32(num_buckets)).astype(jnp.int32)
+        corr = jnp.zeros((num_buckets,), jnp.int32).at[pad_bucket].add(1)
+        hist = hist.at[-1].add(-corr)
+    return hist
+
+
+def partition_order(keys: jnp.ndarray, num_buckets: int, *, block: int = 2048,
+                    interpret: bool = False):
+    """Full partition: returns (order, bucket_offsets) such that
+    keys[order] is bucket-contiguous (pass 1 kernel + pass 2 jnp)."""
+    hist = hash_partition_histogram(
+        keys, num_buckets=num_buckets, block=block, interpret=interpret
+    )
+    bucket = (_hash(keys) % jnp.uint32(num_buckets)).astype(jnp.int32)
+    order = jnp.argsort(bucket, stable=True)
+    totals = jnp.sum(hist, axis=0)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(totals)[:-1].astype(jnp.int32)])
+    return order, offsets

@@ -1,0 +1,68 @@
+"""jit'd dispatch wrappers: ``impl="auto"`` -> Pallas on TPU, interpret-mode
+Pallas or the jnp reference elsewhere.  The model code calls these; the
+dry-run lowers the ref path (XLA:CPU cannot codegen Mosaic), real TPU runs
+take the kernel path."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import hash_partition as _hp
+from repro.kernels import ref as _ref
+from repro.kernels import rmsnorm as _rms
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return impl
+
+
+def flash_attention(q, k, v, *, causal=True, impl: str = "auto", **kw):
+    mode = _resolve(impl)
+    if mode == "pallas":
+        return _fa.flash_attention(q, k, v, causal=causal, **kw)
+    if mode == "interpret":
+        return _fa.flash_attention(q, k, v, causal=causal, interpret=True, **kw)
+    return _ref.flash_attention_ref(q, k, v, causal=causal)
+
+
+def decode_attention(q, k, v, cache_len, *, impl: str = "auto", **kw):
+    mode = _resolve(impl)
+    if mode == "pallas":
+        return _dec.decode_attention(q, k, v, cache_len, **kw)
+    if mode == "interpret":
+        return _dec.decode_attention(q, k, v, cache_len, interpret=True, **kw)
+    return _ref.decode_attention_ref(q, k, v, cache_len)
+
+
+def rmsnorm(x, w, *, eps: float = 1e-5, impl: str = "auto", **kw):
+    mode = _resolve(impl)
+    if mode == "pallas":
+        return _rms.rmsnorm(x, w, eps=eps, **kw)
+    if mode == "interpret":
+        return _rms.rmsnorm(x, w, eps=eps, interpret=True, **kw)
+    return _ref.rmsnorm_ref(x, w, eps=eps)
+
+
+def hash_partition_histogram(keys, *, num_buckets: int, impl: str = "auto", **kw):
+    mode = _resolve(impl)
+    if mode == "pallas":
+        return _hp.hash_partition_histogram(keys, num_buckets=num_buckets, **kw)
+    if mode == "interpret":
+        return _hp.hash_partition_histogram(
+            keys, num_buckets=num_buckets, interpret=True, **kw
+        )
+    # ref returns the global histogram; shape it like one block
+    return _ref.hash_partition_histogram_ref(keys, num_buckets=num_buckets)[None]

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+the per-kernel shape/dtype sweeps assert against)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True) -> jnp.ndarray:
+    """q [B,H,S,D]; k,v [B,KV,S,D] -> [B,H,S,D]; naive full-softmax."""
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    kf = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf) / math.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, cache_len) -> jnp.ndarray:
+    """q [B,H,D]; k,v [B,KV,S,D] -> [B,H,D]."""
+    B, H, D = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    G = H // KV
+    kf = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kf) / math.sqrt(D)
+    mask = jnp.arange(S)[None, None, :] < cache_len
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p, vf).astype(q.dtype)
+
+
+def rmsnorm_ref(x, w, *, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def hash_u32_ref(keys):
+    k = keys.astype(jnp.uint32)
+    h = k * jnp.uint32(2654435761)
+    return h ^ (h >> 16)
+
+
+def hash_partition_histogram_ref(keys, *, num_buckets: int) -> jnp.ndarray:
+    """Global histogram [num_buckets] (per-block results sum to this)."""
+    bucket = (hash_u32_ref(keys) % jnp.uint32(num_buckets)).astype(jnp.int32)
+    return jnp.zeros((num_buckets,), jnp.int32).at[bucket].add(1)

@@ -1,0 +1,57 @@
+"""Fused RMSNorm — Pallas TPU kernel.
+
+Row-tiled: each program loads a [block_rows, d] tile into VMEM, computes
+the f32 mean-square + rsqrt on the VPU and applies the scale in one pass
+(one HBM read + one write per element, vs 3 reads / 2 writes unfused).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rms_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def rmsnorm(
+    x: jnp.ndarray,  # [..., d]
+    w: jnp.ndarray,  # [d]
+    *,
+    eps: float = 1e-5,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    orig_shape = x.shape
+    d = x.shape[-1]
+    n = 1
+    for s in x.shape[:-1]:
+        n *= s
+    x2 = x.reshape(n, d)
+    block_rows = min(block_rows, n)
+    # pad rows to a block multiple
+    pad = (-n) % block_rows
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    grid = (x2.shape[0] // block_rows,)
+    out = pl.pallas_call(
+        functools.partial(_rms_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(x2, w)
+    if pad:
+        out = out[:n]
+    return out.reshape(orig_shape)

@@ -1,0 +1,203 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: ``lower().compile()`` every (arch x shape x mesh) cell
+with ShapeDtypeStruct inputs (no allocation) and extract the roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+      --shape train_4k --mesh single --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+
+Each cell records memory_analysis, my trip-count-aware HLO cost analysis
+(FLOPs / bytes / collective bytes per device) and the collective schedule
+into a JSON file consumed by benchmarks/roofline.py and EXPERIMENTS.md.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import subprocess  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    ARCHS, SHAPES, default_run_config, get_config, shape_applicable,
+)
+from repro.distributed import hlo_analysis  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import input_specs  # noqa: E402
+from repro.train.step import (  # noqa: E402
+    make_decode_step, make_prefill_step, make_train_step,
+)
+
+# TPU v5e hardware model (per chip)
+PEAK_FLOPS = 197e12       # bf16
+HBM_BW = 819e9            # bytes/s
+ICI_BW = 50e9             # bytes/s/link
+HBM_PER_CHIP = 16 * 1024**3
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, overrides=None) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.with_overrides(**overrides)
+    shape = SHAPES[shape_name]
+    run_cfg = default_run_config(arch, shape_name)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.size
+
+    kind, args, in_specs, out_specs = input_specs(cfg, shape, run_cfg, mesh)
+    if kind == "train":
+        step = make_train_step(cfg, run_cfg)
+    elif kind == "prefill":
+        step = make_prefill_step(cfg, run_cfg)
+    else:
+        step = make_decode_step(cfg, run_cfg)
+
+    # donate the mutable aggregate (train state / decode cache) so input and
+    # output buffers alias — halves steady-state HBM for train and decode
+    donate = {"train": (0,), "prefill": (), "decode": (2,)}[kind]
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(step, in_shardings=in_specs, out_shardings=out_specs,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    txt = compiled.as_text()
+    cost = hlo_analysis.analyze(txt)
+    xla_cost = compiled.cost_analysis() or {}
+
+    per_dev_bytes = (
+        mem.argument_size_in_bytes + mem.output_size_in_bytes
+        + mem.temp_size_in_bytes - mem.alias_size_in_bytes
+    )
+    # XLA:CPU float-normalization allocates f32 copies of big bf16 buffers
+    # (no native bf16 dot on host); a TPU compile would not.  Report both.
+    f32_dup = hlo_analysis.cpu_f32_dup_bytes(txt)
+    # clamp: the dup detector can over-match fusion-internal values; the
+    # adjusted figure never drops below the live args+outputs
+    floor = mem.argument_size_in_bytes + mem.output_size_in_bytes - mem.alias_size_in_bytes
+    adj_bytes = max(per_dev_bytes - f32_dup, floor)
+    flops_dev = cost["flops_per_device"]
+    bytes_dev = cost["bytes_per_device"]
+    coll_dev = cost["collective_bytes_per_device"]
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "kind": kind,
+        "n_chips": n_chips,
+        "ok": True,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "per_device_bytes": per_dev_bytes,
+            "cpu_f32_dup_bytes": f32_dup,
+            "per_device_bytes_tpu_adjusted": adj_bytes,
+            "fits_16gb": bool(per_dev_bytes <= HBM_PER_CHIP),
+            "fits_16gb_tpu_adjusted": bool(adj_bytes <= HBM_PER_CHIP),
+        },
+        "cost": cost,
+        "xla_flops_per_device_uncorrected": xla_cost.get("flops", -1.0),
+        "roofline": {
+            "compute_s": flops_dev / PEAK_FLOPS,
+            "memory_s": bytes_dev / HBM_BW,
+            "collective_s": coll_dev / ICI_BW,
+        },
+        "collective_schedule": hlo_analysis.collective_schedule(txt),
+    }
+    terms = result["roofline"]
+    result["roofline"]["dominant"] = max(terms, key=lambda k: terms[k])
+    return result
+
+
+def cell_filename(arch, shape_name, mesh_kind):
+    return f"{arch}__{shape_name}__{mesh_kind}.json"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--subprocess-per-cell", action="store_true",
+                    help="isolate each cell in a child process (RSS containment)")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--override", default=None,
+                    help="JSON dict of ModelConfig overrides (perf experiments)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [
+            (a, s, m)
+            for a in ARCHS
+            for s in SHAPES
+            for m in meshes
+            if shape_applicable(a, s)
+        ]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch/--shape required unless --all")
+        cells = [(args.arch, args.shape, m) for m in meshes]
+
+    failures = 0
+    for arch, shape_name, mesh_kind in cells:
+        path = os.path.join(args.out, cell_filename(arch, shape_name, mesh_kind))
+        if args.skip_existing and os.path.exists(path):
+            print(f"skip {path}")
+            continue
+        if args.subprocess_per_cell:
+            cmd = [
+                sys.executable, "-m", "repro.launch.dryrun",
+                "--arch", arch, "--shape", shape_name, "--mesh", mesh_kind,
+                "--out", args.out,
+            ]
+            if args.override:
+                cmd += ["--override", args.override]
+            r = subprocess.run(cmd, capture_output=True, text=True)
+            if r.returncode != 0:
+                failures += 1
+                print(f"FAIL (subprocess) {arch} {shape_name} {mesh_kind}")
+                print(r.stdout[-2000:], r.stderr[-2000:])
+            else:
+                print(r.stdout.strip().splitlines()[-1] if r.stdout.strip() else "ok")
+            continue
+        t0 = time.time()
+        try:
+            overrides = json.loads(args.override) if args.override else None
+            res = run_cell(arch, shape_name, mesh_kind, overrides)
+        except Exception as e:  # noqa: BLE001 — record the failure, keep going
+            res = {
+                "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "ok": False, "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-4000:],
+            }
+            failures += 1
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        status = "OK " if res.get("ok") else "FAIL"
+        dom = res.get("roofline", {}).get("dominant", "-")
+        print(
+            f"{status} {arch:22s} {shape_name:12s} {mesh_kind:6s} "
+            f"t={time.time()-t0:6.1f}s dominant={dom}",
+            flush=True,
+        )
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

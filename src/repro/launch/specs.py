@@ -1,0 +1,112 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs`` returns (step_kind, args, in_specs) where ``args`` is the
+tuple passed to the step function and ``in_specs`` the matching
+PartitionSpec tree — weak-type-correct, shardable, zero allocation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common.params import abstract_params
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.distributed.sharding import merge_rules, param_specs_tree, spec_for
+from repro.train.state import abstract_train_state, cache_specs, train_state_specs
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _batch_specs(cfg: ModelConfig, B: int, S: int, *, labels: bool):
+    """(abstract batch dict, logical-axes dict)."""
+    batch: Dict[str, Any] = {}
+    axes: Dict[str, Tuple] = {}
+    if cfg.is_encoder_decoder:
+        dec = max(S // cfg.dec_len_ratio, 8)
+        batch["frames"] = _sds((B, S, cfg.d_model), cfg.compute_dtype)
+        axes["frames"] = ("act_batch", None, None)
+        batch["tokens"] = _sds((B, dec), jnp.int32)
+        axes["tokens"] = ("act_batch", None)
+        if labels:
+            batch["labels"] = _sds((B, dec), jnp.int32)
+            axes["labels"] = ("act_batch", None)
+        return batch, axes
+    if cfg.input_kind == "embeds":
+        batch["embeds"] = _sds((B, S, cfg.d_model), cfg.compute_dtype)
+        axes["embeds"] = ("act_batch", None, None)
+        if cfg.mrope_sections:
+            batch["positions"] = _sds((B, S, 3), jnp.int32)
+            axes["positions"] = ("act_batch", None, None)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32)
+        axes["tokens"] = ("act_batch", None)
+    if labels:
+        batch["labels"] = _sds((B, S), jnp.int32)
+        axes["labels"] = ("act_batch", None)
+    return batch, axes
+
+
+def _axes_to_specs(axes_tree, shapes_tree, mesh, rules):
+    return jax.tree.map(
+        lambda ax, s: spec_for(ax, s.shape, mesh, rules), axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def input_specs(
+    cfg: ModelConfig, shape: ShapeConfig, run_cfg: RunConfig, mesh, rules=None
+):
+    """-> (kind, args_tuple, in_specs_tuple)."""
+    overrides = dict(rules) if rules else {}
+    if cfg.fsdp_over_pod:
+        overrides["embed"] = ("pod", "data")
+    rules = merge_rules(overrides)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        state = abstract_train_state(cfg, run_cfg)
+        state_specs = param_specs_tree(train_state_specs(cfg, run_cfg), mesh, rules)
+        batch, axes = _batch_specs(cfg, B, S, labels=True)
+        batch_specs = {
+            k: spec_for(axes[k], v.shape, mesh, rules) for k, v in batch.items()
+        }
+        out_specs = (state_specs, {"loss": P(), "grad_norm": P()})
+        return "train", (state, batch), (state_specs, batch_specs), out_specs
+    if shape.kind == "prefill":
+        params = abstract_params(_params_only(cfg, run_cfg))
+        p_specs = param_specs_tree(_params_only(cfg, run_cfg), mesh, rules)
+        batch, axes = _batch_specs(cfg, B, S, labels=False)
+        batch_specs = {
+            k: spec_for(axes[k], v.shape, mesh, rules) for k, v in batch.items()
+        }
+        out_specs = spec_for(("act_batch", "act_vocab"), (B, cfg.padded_vocab), mesh, rules)
+        return "prefill", (params, batch), (p_specs, batch_specs), out_specs
+    if shape.kind == "decode":
+        params = abstract_params(_params_only(cfg, run_cfg))
+        p_specs = param_specs_tree(_params_only(cfg, run_cfg), mesh, rules)
+        cspecs = cache_specs(cfg, B, S)
+        cache = abstract_params(cspecs)
+        c_specs = param_specs_tree(cspecs, mesh, rules)
+        tokens = _sds((B, 1), jnp.int32)
+        t_spec = spec_for(("act_batch", None), (B, 1), mesh, rules)
+        clen = _sds((), jnp.int32)
+        out_specs = (
+            spec_for(("act_batch",), (B,), mesh, rules),
+            spec_for(("act_batch", None, "act_vocab"), (B, 1, cfg.padded_vocab), mesh, rules),
+            c_specs,
+        )
+        return (
+            "decode",
+            (params, tokens, cache, clen),
+            (p_specs, t_spec, c_specs, P()),
+            out_specs,
+        )
+    raise ValueError(shape.kind)
+
+
+def _params_only(cfg: ModelConfig, run_cfg: RunConfig):
+    return train_state_specs(cfg, run_cfg)["params"]

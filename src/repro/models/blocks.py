@@ -1,0 +1,569 @@
+"""Transformer building blocks: norms, RoPE/M-RoPE, GQA/MLA attention
+(chunked flash-style reference path), SwiGLU/GeGLU/GELU MLPs, GShard-style
+MoE (einsum dispatch baseline + gather-dispatch optimized variant).
+
+Every block is a pair of functions:
+
+* ``<kind>_specs(cfg) -> PyTree[Param]`` — parameter declaration with
+  logical sharding axes;
+* ``<kind>_apply(cfg, params, x, ...) -> y`` — pure forward.
+
+Attention convention: activations are [batch, seq, ...]; caches are dicts.
+Compute runs in ``cfg.compute_dtype`` (bf16); norms/softmax accumulate fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
+
+from repro.common.params import Param
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_specs(d: int) -> Dict[str, Param]:
+    return {"scale": Param((d,), (None,), init="ones")}
+
+
+def rmsnorm_apply(params, x, eps: float = 1e-5):
+    """f32 variance reduction, input-dtype scaling multiply (H5 in
+    EXPERIMENTS §Perf: upcasting the whole tensor doubled fwd+bwd HBM
+    traffic; the reduction accumulates f32 inside the fused reduce)."""
+    var = jnp.mean(
+        jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True
+    )
+    scale = (jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    return x * scale * params["scale"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def _rope_freqs(dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [B, S, H, D]; positions: [B, S] int32."""
+    d = x.shape[-1]
+    freqs = _rope_freqs(d, theta)  # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B,S,D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float, sections: Tuple[int, ...]
+) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE. positions: [B, S, 3] (t, h, w); ``sections``
+    splits the D/2 rotary frequencies into (t, h, w) groups."""
+    d = x.shape[-1]
+    freqs = _rope_freqs(d, theta)  # [D/2]
+    # angles per modality then stitched along the frequency dim
+    ang = positions[..., None, :].astype(jnp.float32)  # [B,S,1,3]
+    ang = ang * freqs[None, None, :, None]  # [B,S,D/2,3]
+    sec_idx = []
+    for i, s in enumerate(sections):
+        sec_idx += [i] * s
+    sec_idx = jnp.asarray(sec_idx[: d // 2], dtype=jnp.int32)
+    angles = jnp.take_along_axis(
+        ang, sec_idx[None, None, :, None].astype(jnp.int32), axis=-1
+    )[..., 0]  # [B,S,D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention (jnp reference path — differentiable, O(chunk)
+# memory; the Pallas kernel in repro.kernels is the TPU fast path).
+# ---------------------------------------------------------------------------
+
+_NEG_INF = -1e30
+
+
+def _attn_chunk(q, k, v, qpos, kpos, causal, window, scale):
+    """One (q-chunk x kv-chunk) tile. q:[B,qc,H,D] k,v:[B,kc,H,D]."""
+    s = jnp.einsum(
+        "bqhd,bchd->bhqc", q, k, preferred_element_type=jnp.float32
+    ) * scale  # [B,H,qc,kc]
+    mask = jnp.ones((q.shape[1], k.shape[1]), dtype=bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(mask[None, None], s, _NEG_INF)
+    m = jnp.max(s, axis=-1)  # [B,H,qc]
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhqc,bchd->bqhd", p.astype(v.dtype), v)
+    return m, l, o.astype(jnp.float32)
+
+
+def _repeat_kv(k: jnp.ndarray, H: int, seq_axes=("act_batch", None, "act_heads", None)):
+    """[B,S,KV,D] -> [B,S,H,D] (GQA repeat), sharding-constrained so the
+    repeated heads land on the model axis instead of being replicated."""
+    from repro.distributed.sharding import constrain
+
+    KV = k.shape[2]
+    if KV == H:
+        return k
+    k = jnp.repeat(k, H // KV, axis=2)
+    return constrain(k, seq_axes)
+
+
+def chunked_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """q: [B,Sq,H,D]; k, v: [B,Skv,KV,D] -> [B,Sq,H,D].
+
+    Outer loop over q chunks is a *python* loop (static), so causal chunks
+    only visit the KV prefix they can see — the compiled FLOPs follow the
+    causal triangle instead of the full rectangle.  Inner loop is a
+    ``lax.scan`` over kv chunks with running-softmax accumulators.
+    """
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    # GQA repeat happens per KV tile inside the scan (H4 in EXPERIMENTS
+    # §Perf): repeating the full sequence up-front writes + reads G x the
+    # whole K/V — per-tile repeat touches only the live block.
+    per_tile_repeat = KV != H
+    scale = 1.0 / math.sqrt(D)
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, k.shape[1])
+    nq = (Sq + q_chunk - 1) // q_chunk
+    qg = q
+
+    outs = []
+    for qi in range(nq):
+        q_lo = qi * q_chunk
+        qc = min(q_chunk, Sq - q_lo)
+        qblk = jax.lax.slice_in_dim(qg, q_lo, q_lo + qc, axis=1)
+        qpos = q_offset + q_lo + jnp.arange(qc)
+        # visible kv range for this q chunk (static)
+        hi = k.shape[1] if not causal else q_offset + q_lo + qc
+        hi = min(hi, k.shape[1])
+        lo = 0
+        if window:
+            lo = max(0, q_offset + q_lo - window + 1)
+            lo = (lo // kv_chunk) * kv_chunk  # align
+        hi_pad = ((hi - lo + kv_chunk - 1) // kv_chunk) * kv_chunk + lo
+        hi_pad = min(hi_pad, k.shape[1])
+        nkv = max((hi_pad - lo + kv_chunk - 1) // kv_chunk, 1)
+
+        def kv_body(carry, j):
+            m_prev, l_prev, o_prev = carry
+            k_lo = lo + j * kv_chunk
+            kblk = jax.lax.dynamic_slice_in_dim(k, k_lo, kv_chunk, axis=1)
+            vblk = jax.lax.dynamic_slice_in_dim(v, k_lo, kv_chunk, axis=1)
+            if per_tile_repeat:
+                kblk = _repeat_kv(kblk, H)
+                vblk = _repeat_kv(vblk, H)
+            kpos = k_lo + jnp.arange(kv_chunk)
+            m_new, l_new, o_new = _attn_chunk(
+                qblk, kblk, vblk, qpos, kpos, causal, window, scale
+            )
+            m_run = jnp.maximum(m_prev, m_new)
+            a = jnp.exp(m_prev - m_run)  # [B,H,qc]
+            b = jnp.exp(m_new - m_run)
+            l_run = l_prev * a + l_new * b
+            o_run = o_prev * a.transpose(0, 2, 1)[..., None] + (
+                o_new * b.transpose(0, 2, 1)[..., None]
+            )
+            return (m_run, l_run, o_run), None
+
+        m0 = jnp.full((B, H, qc), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, qc), jnp.float32)
+        o0 = jnp.zeros((B, qc, H, D), jnp.float32)
+        # flash-style bwd: recompute score tiles instead of stacking them as
+        # scan residuals (H6 in EXPERIMENTS §Perf — trades ~25% extra attn
+        # FLOPs in bwd for O(S^2/chunk) saved HBM)
+        (mF, lF, oF), _ = jax.lax.scan(
+            jax.checkpoint(kv_body), (m0, l0, o0), jnp.arange(nkv), length=nkv
+        )
+        lF = jnp.maximum(lF, 1e-30)
+        out = oF / lF.transpose(0, 2, 1)[..., None]
+        outs.append(out)
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len, *, window: int = 0):
+    """Single-step decode. q: [B,1,H,D]; caches: [B,Smax,KV,D];
+    cache_len: [] int32 — number of valid positions (including current).
+
+    The cache is sequence-sharded over the model axis (flash-decoding style);
+    the contraction over S becomes a partial-softmax + psum under GSPMD."""
+    B, _, H, D = q.shape
+    cache_axes = ("cache_batch", "cache_seq", None, None)
+    kf = _repeat_kv(k_cache, H, cache_axes)
+    vf = _repeat_kv(v_cache, H, cache_axes)
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum(
+        "bhd,bshd->bhs", q[:, 0], kf, preferred_element_type=jnp.float32
+    ) * scale
+    pos = jnp.arange(kf.shape[1])
+    mask = pos[None, None, :] < cache_len
+    if window:
+        mask &= pos[None, None, :] >= (cache_len - window)
+    s = jnp.where(mask, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhs,bshd->bhd", p.astype(vf.dtype), vf)
+    return o[:, None].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+
+def attn_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, Dh = cfg.d_model, cfg.head_dim
+    H, KV = cfg.padded_gqa()
+    return {
+        "norm": rmsnorm_specs(d),
+        "wq": Param((d, H, Dh), ("embed", "heads", None)),
+        "wk": Param((d, KV, Dh), ("embed", "kv_heads", None)),
+        "wv": Param((d, KV, Dh), ("embed", "kv_heads", None)),
+        "wo": Param((H, Dh, d), ("heads", None, "embed")),
+    }
+
+
+def _rope_or_mrope(cfg, x, positions):
+    if cfg.mrope_sections:
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    if positions.ndim == 3:  # mrope positions given but plain rope cfg
+        positions = positions[..., 0]
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+def attn_apply(
+    cfg: ModelConfig,
+    params,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cache: Optional[Dict] = None,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    kv_source: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """GQA attention. ``cache`` (decode): {"k","v","len"}. ``kv_source``
+    (cross-attention): encoder states."""
+    from repro.distributed.sharding import constrain
+
+    cdt = cfg.compute_dtype
+    h = rmsnorm_apply(params["norm"], x, cfg.norm_eps).astype(cdt)
+    src = h if kv_source is None else kv_source.astype(cdt)
+    act_axes = ("act_batch", None, "act_heads", None)
+    q = constrain(jnp.einsum("bsd,dhk->bshk", h, params["wq"].astype(cdt)), act_axes)
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"].astype(cdt))
+    is_self = kv_source is None
+    if is_self and causal:
+        q = _rope_or_mrope(cfg, q, positions)
+        if cache is None:
+            k = _rope_or_mrope(cfg, k, positions)
+        else:
+            k = _rope_or_mrope(cfg, k, positions)
+    new_cache = None
+    if cache is not None and is_self:
+        # decode: append to cache (ring-buffer for windowed attention)
+        idx = cache["len"]
+        slot = idx % cache["k"].shape[1] if window else idx
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        new_cache = {"k": k_cache, "v": v_cache, "len": idx + 1}
+        if window:
+            # ring buffer of exactly `window` slots: all valid once warm
+            o = decode_attention_ref(q, k_cache, v_cache, jnp.minimum(idx + 1, k_cache.shape[1]), window=0)
+        else:
+            o = decode_attention_ref(q, k_cache, v_cache, idx + 1, window=0)
+    elif cache is not None and not is_self:
+        o = decode_attention_ref(q, cache["xk"], cache["xv"], cache["xlen"], window=0)
+        new_cache = cache
+    else:
+        o = chunked_attention(
+            q, k, v, causal=causal, window=window,
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+        )
+    y = jnp.einsum("bshk,hkd->bsd", o.astype(cdt), params["wo"].astype(cdt))
+    y = _checkpoint_name(y, "block_out")
+    return x + y.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, DeepSeek-V2 / MiniCPM3)
+# ---------------------------------------------------------------------------
+
+
+def mla_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, H = cfg.d_model, cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nd, rd, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    H, _ = cfg.padded_gqa()
+    specs: Dict[str, Any] = {
+        "norm": rmsnorm_specs(d),
+        "wkv_a": Param((d, kvr + rd), ("embed", None)),
+        "kv_norm": rmsnorm_specs(kvr),
+        "wk_b": Param((kvr, H, nd), ("kv_lora", "heads", None)),
+        "wv_b": Param((kvr, H, vd), ("kv_lora", "heads", None)),
+        "wo": Param((H, vd, d), ("heads", None, "embed")),
+    }
+    if qr > 0:
+        specs["wq_a"] = Param((d, qr), ("embed", "q_lora"))
+        specs["q_norm"] = rmsnorm_specs(qr)
+        specs["wq_b"] = Param((qr, H, nd + rd), ("q_lora", "heads", None))
+    else:
+        specs["wq"] = Param((d, H, nd + rd), ("embed", "heads", None))
+    return specs
+
+
+def mla_apply(
+    cfg: ModelConfig,
+    params,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cache: Optional[Dict] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    cdt = cfg.compute_dtype
+    B, S, _ = x.shape
+    H, _kv = cfg.padded_gqa()
+    nd, rd, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    h = rmsnorm_apply(params["norm"], x, cfg.norm_eps).astype(cdt)
+
+    if cfg.q_lora_rank > 0:
+        ql = jnp.einsum("bsd,dr->bsr", h, params["wq_a"].astype(cdt))
+        ql = rmsnorm_apply(params["q_norm"], ql, cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", ql, params["wq_b"].astype(cdt))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", h, params["wq"].astype(cdt))
+    q_nope, q_pe = q[..., :nd], q[..., nd:]
+    q_pe = apply_rope(q_pe, positions if positions.ndim == 2 else positions[..., 0], cfg.rope_theta)
+
+    kv = jnp.einsum("bsd,dr->bsr", h, params["wkv_a"].astype(cdt))
+    c_kv, k_pe = kv[..., : cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    c_kv = rmsnorm_apply(params["kv_norm"], c_kv, cfg.norm_eps)
+    k_pe = apply_rope(k_pe[:, :, None, :], positions if positions.ndim == 2 else positions[..., 0], cfg.rope_theta)  # [B,S,1,rd]
+
+    new_cache = None
+    if cache is not None:
+        idx = cache["len"]
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), idx, axis=1)
+        kpe_c = jax.lax.dynamic_update_slice_in_dim(cache["k_pe"], k_pe[:, :, 0, :].astype(cache["k_pe"].dtype), idx, axis=1)
+        new_cache = {"c_kv": ckv_c, "k_pe": kpe_c, "len": idx + 1}
+        # naive (baseline) decode: expand latents to full K/V then attend.
+        k_nope = jnp.einsum("bsr,rhk->bshk", ckv_c.astype(cdt), params["wk_b"].astype(cdt))
+        v_full = jnp.einsum("bsr,rhk->bshk", ckv_c.astype(cdt), params["wv_b"].astype(cdt))
+        scale = 1.0 / math.sqrt(nd + rd)
+        s = (
+            jnp.einsum("bhk,bshk->bhs", q_nope[:, 0].astype(jnp.float32), k_nope.astype(jnp.float32))
+            + jnp.einsum("bhk,bsk->bhs", q_pe[:, 0].astype(jnp.float32), kpe_c.astype(jnp.float32))
+        ) * scale
+        pos = jnp.arange(ckv_c.shape[1])
+        s = jnp.where(pos[None, None, :] < idx + 1, s, _NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhs,bshk->bhk", p.astype(cdt), v_full)[:, None]
+    else:
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["wk_b"].astype(cdt))
+        v_full = jnp.einsum("bsr,rhk->bshk", c_kv, params["wv_b"].astype(cdt))
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe, (B, S, H, rd)).astype(k_nope.dtype)], axis=-1
+        )
+        q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+        # pad v to qk head dim for the shared chunked kernel, then trim
+        if vd < nd + rd:
+            v_pad = jnp.pad(v_full, ((0, 0), (0, 0), (0, 0), (0, nd + rd - vd)))
+        else:
+            v_pad = v_full
+        o = chunked_attention(
+            q_full, k_full, v_pad, causal=True,
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+        )[..., :vd]
+    y = jnp.einsum("bshk,hkd->bsd", o.astype(cdt), params["wo"].astype(cdt))
+    y = _checkpoint_name(y, "block_out")
+    return x + y.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, Any]:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    specs = {
+        "norm": rmsnorm_specs(d),
+        "w1": Param((d, ff), ("embed", "mlp")),
+        "w2": Param((ff, d), ("mlp", "embed")),
+    }
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        specs["w3"] = Param((d, ff), ("embed", "mlp"))
+    return specs
+
+
+def _act(name: str, x):
+    if name == "swiglu":
+        return jax.nn.silu(x)
+    if name == "geglu":
+        return jax.nn.gelu(x)
+    return jax.nn.gelu(x)
+
+
+def mlp_apply(cfg: ModelConfig, params, x: jnp.ndarray) -> jnp.ndarray:
+    cdt = cfg.compute_dtype
+    h = rmsnorm_apply(params["norm"], x, cfg.norm_eps).astype(cdt)
+    u = jnp.einsum("bsd,df->bsf", h, params["w1"].astype(cdt))
+    if "w3" in params:
+        g = jnp.einsum("bsd,df->bsf", h, params["w3"].astype(cdt))
+        u = _act(cfg.mlp_act, u) * g
+    else:
+        u = _act(cfg.mlp_act, u)
+    y = jnp.einsum("bsf,fd->bsd", u, params["w2"].astype(cdt))
+    y = _checkpoint_name(y, "block_out")
+    return x + y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE (GShard capacity-based top-k)
+# ---------------------------------------------------------------------------
+
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    specs: Dict[str, Any] = {
+        "norm": rmsnorm_specs(d),
+        "router": Param((d, E), ("embed", "experts"), init="normal", scale=0.02),
+        "w1": Param((E, d, ff), ("experts", "embed", "expert_mlp")),
+        "w2": Param((E, ff, d), ("experts", "expert_mlp", "embed")),
+    }
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        specs["w3"] = Param((E, d, ff), ("experts", "embed", "expert_mlp"))
+    if cfg.moe_dense_residual:
+        dd = cfg.dense_ff or cfg.d_ff
+        specs["dense"] = mlp_specs(cfg, dd)
+    return specs
+
+
+def _capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    c = int(math.ceil(tokens_per_group * cfg.top_k * cfg.capacity_factor / cfg.num_experts))
+    return max(c, 4)
+
+
+def _route(cfg, params, h):
+    """h: [G,S,d] -> gates [G,S,k], idx [G,S,k], aux_loss."""
+    logits = jnp.einsum("gsd,de->gse", h, params["router"].astype(h.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx[..., 0], cfg.num_experts, dtype=jnp.float32), axis=-2),
+        axis=0,
+    ) / probs.shape[1]
+    aux = jnp.sum(me * ce) * cfg.num_experts
+    return gates.astype(h.dtype), idx, aux
+
+
+def _positions_in_expert(idx, E, S):
+    """idx: [G,S,k] -> pos [G,S,k] slot positions per expert (priority by k
+    then token order), plus expert one-hots [G,S,k,E]."""
+    G, _, K = idx.shape
+    onehots = jax.nn.one_hot(idx, E, dtype=jnp.int32)  # [G,S,k,E]
+    # flatten (k major per token? GShard: priority k=0 first across all tokens)
+    flat = jnp.transpose(onehots, (0, 2, 1, 3)).reshape(G, K * S, E)
+    pos_flat = jnp.cumsum(flat, axis=1) - 1  # [G,k*S,E]
+    pos_flat = jnp.sum(pos_flat * flat, axis=-1)  # [G,k*S]
+    pos = jnp.transpose(pos_flat.reshape(G, K, S), (0, 2, 1))  # [G,S,k]
+    return pos, onehots
+
+
+def moe_apply(cfg: ModelConfig, params, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y, aux_loss)."""
+    cdt = cfg.compute_dtype
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    h = rmsnorm_apply(params["norm"], x, cfg.norm_eps).astype(cdt)
+    G = B  # one routing group per batch row (keeps groups data-sharded)
+    hg = h.reshape(G, S, d)
+    C = _capacity(S, cfg)
+    gates, idx, aux = _route(cfg, params, hg)
+    pos, onehots = _positions_in_expert(idx, E, S)
+    keep = ((pos < C) & (gates > 0)).astype(cdt)
+
+    if cfg.moe_impl == "einsum":
+        # GShard-classic: dense one-hot dispatch/combine einsums.
+        pos_oh = jax.nn.one_hot(pos, C, dtype=cdt)  # [G,S,k,C]
+        disp = jnp.einsum(
+            "gske,gskc->gsec", onehots.astype(cdt) * keep[..., None], pos_oh
+        )  # [G,S,E,C]
+        expert_in = jnp.einsum("gsec,gsd->gecd", disp, hg)
+        expert_out = _expert_ffn(cfg, params, expert_in)
+        # combine tensor is gate-weighted PER k-choice (outer-producting the
+        # summed dispatch with gates would weight each chosen expert by
+        # sum(gates)=1 instead of its own gate)
+        comb = jnp.einsum(
+            "gske,gskc,gsk->gsec",
+            onehots.astype(cdt) * keep[..., None], pos_oh, gates * keep,
+        )
+        y = jnp.einsum("gsec,gecd->gsd", comb, expert_out)
+        y = y.reshape(B, S, d)
+    else:
+        # gather dispatch: no O(S*E*C) dense einsums.
+        gidx = jnp.arange(G)[:, None, None]
+        slot_token = jnp.full((G, E, C), S, jnp.int32)  # sentinel = S
+        tok = jnp.broadcast_to(jnp.arange(S)[None, :, None], idx.shape)
+        # out-of-capacity (pos >= C) indices fall outside the slot dim and
+        # are dropped by the scatter — they must NOT clobber slot C-1
+        slot_token = slot_token.at[gidx, idx, pos].set(tok, mode="drop")
+        h_pad = jnp.concatenate([hg, jnp.zeros((G, 1, d), hg.dtype)], axis=1)
+        expert_in = jnp.take_along_axis(
+            h_pad[:, :, None, :], slot_token.reshape(G, E * C, 1, 1).clip(0, S), axis=1
+        ).reshape(G, E, C, d)
+        expert_out = _expert_ffn(cfg, params, expert_in)
+        eo_flat = expert_out.reshape(G, E * C, d)
+        slot_of_tok = jnp.clip(idx * C + jnp.clip(pos, 0, C - 1), 0, E * C - 1)  # [G,S,k]
+        picked = jnp.take_along_axis(
+            eo_flat[:, :, None, :], slot_of_tok.reshape(G, S * K, 1, 1), axis=1
+        ).reshape(G, S, K, d)
+        y = jnp.sum(picked * (gates * keep)[..., None], axis=2).reshape(B, S, d)
+
+    if cfg.moe_dense_residual:
+        y = y + (mlp_apply(cfg, params["dense"], x) - x)
+    return x + y.astype(x.dtype), aux
+
+
+def _expert_ffn(cfg, params, expert_in):
+    """expert_in: [G,E,C,d] -> [G,E,C,d]."""
+    cdt = cfg.compute_dtype
+    u = jnp.einsum("gecd,edf->gecf", expert_in, params["w1"].astype(cdt))
+    if "w3" in params:
+        g = jnp.einsum("gecd,edf->gecf", expert_in, params["w3"].astype(cdt))
+        u = _act(cfg.mlp_act, u) * g
+    else:
+        u = _act(cfg.mlp_act, u)
+    return jnp.einsum("gecf,efd->gecd", u, params["w2"].astype(cdt))

@@ -1,0 +1,149 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv frontend is a STUB per the assignment: ``input_specs`` supplies
+precomputed frame embeddings [B, T_enc, d] (what the two conv layers would
+produce).  Encoder = bidirectional attention stack with sinusoidal positions;
+decoder = causal self-attention (+ cache) x cross-attention to the encoder
+output x MLP.  Cross K/V are precomputed once per sequence and live in the
+decode cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.params import Param, is_param
+from repro.configs.base import ModelConfig
+from repro.models import blocks as B
+from repro.models.lm import _stack
+
+
+def _sinusoid(S: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(S)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    inv = jnp.exp(-dim * (jnp.log(10000.0) / max(d // 2 - 1, 1)))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _enc_layer_specs(cfg: ModelConfig):
+    return {"t": B.attn_specs(cfg), "c": B.mlp_specs(cfg)}
+
+
+def _dec_layer_specs(cfg: ModelConfig):
+    return {
+        "self": B.attn_specs(cfg),
+        "cross": B.attn_specs(cfg),
+        "c": B.mlp_specs(cfg),
+    }
+
+
+def encdec_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    n_dec = cfg.num_decoder_layers or cfg.num_layers
+    return {
+        "embed": Param((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), init="embed"),
+        "enc_unit": _stack({"b0": _enc_layer_specs(cfg)}, cfg.num_layers),
+        "enc_norm": B.rmsnorm_specs(cfg.d_model),
+        "dec_unit": _stack({"b0": _dec_layer_specs(cfg)}, n_dec),
+        "final_norm": B.rmsnorm_specs(cfg.d_model),
+        "lm_head": Param((cfg.d_model, cfg.padded_vocab), ("embed", "vocab")),
+    }
+
+
+def encdec_cache_specs(cfg: ModelConfig, batch: int, max_len: int, enc_len: int):
+    cdt = cfg.compute_dtype
+    n_dec = cfg.num_decoder_layers or cfg.num_layers
+    per_layer = {
+        "k": Param((batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                   ("cache_batch", "cache_seq", "cache_heads", None), dtype=cdt, init="zeros"),
+        "v": Param((batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                   ("cache_batch", "cache_seq", "cache_heads", None), dtype=cdt, init="zeros"),
+        "xk": Param((batch, enc_len, cfg.num_kv_heads, cfg.head_dim),
+                    ("cache_batch", "cache_seq", "cache_heads", None), dtype=cdt, init="zeros"),
+        "xv": Param((batch, enc_len, cfg.num_kv_heads, cfg.head_dim),
+                    ("cache_batch", "cache_seq", "cache_heads", None), dtype=cdt, init="zeros"),
+    }
+    return {"dec_unit": _stack({"b0": per_layer}, n_dec)}
+
+
+def encode(cfg: ModelConfig, params, frames: jnp.ndarray, *, remat: bool = True):
+    """frames: [B, T, d] stubbed conv-frontend output -> encoder states."""
+    x = (frames + _sinusoid(frames.shape[1], cfg.d_model)[None]).astype(cfg.compute_dtype)
+    Bsz, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (Bsz, S)).astype(jnp.int32)
+
+    def body(x, p_i):
+        p = p_i["b0"]
+        x, _ = B.attn_apply(cfg, p["t"], x, positions, causal=False)
+        x = B.mlp_apply(cfg, p["c"], x)
+        return x, None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(fn, x, params["enc_unit"])
+    return B.rmsnorm_apply(params["enc_norm"], x, cfg.norm_eps)
+
+
+def decode_train(cfg: ModelConfig, params, enc_out, tokens, *, remat: bool = True, last_only: bool = False):
+    """Teacher-forced decoder pass. tokens: [B, T_dec] -> logits."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    Bsz, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (Bsz, S)).astype(jnp.int32)
+
+    def body(x, p_i):
+        p = p_i["b0"]
+        x, _ = B.attn_apply(cfg, p["self"], x, positions, causal=True)
+        x, _ = B.attn_apply(cfg, p["cross"], x, positions, causal=False, kv_source=enc_out)
+        x = B.mlp_apply(cfg, p["c"], x)
+        return x, None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(fn, x, params["dec_unit"])
+    if last_only:
+        x = x[:, -1:]
+    x = B.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    return jnp.einsum(
+        "bsd,dv->bsv", x.astype(cfg.compute_dtype), params["lm_head"].astype(cfg.compute_dtype)
+    )
+
+
+def precompute_cross_cache(cfg: ModelConfig, params, enc_out):
+    """Per-layer cross K/V from encoder output (fills the decode cache)."""
+    cdt = cfg.compute_dtype
+
+    def body(_, p_i):
+        p = p_i["b0"]["cross"]
+        src = enc_out.astype(cdt)
+        xk = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(cdt))
+        xv = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(cdt))
+        return None, {"b0": {"xk": xk, "xv": xv}}
+
+    _, cross = jax.lax.scan(body, None, params["dec_unit"])
+    return cross
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache, cache_len):
+    """Single-token decode. tokens: [B,1]; cache per layer: self k/v (+len)
+    and precomputed cross xk/xv."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    Bsz = x.shape[0]
+    positions = jnp.broadcast_to(cache_len[None, None], (Bsz, 1)).astype(jnp.int32)
+
+    def body(x, xs):
+        p_i, c_i = xs
+        p, c = p_i["b0"], c_i["b0"]
+        self_cache = {"k": c["k"], "v": c["v"], "len": cache_len}
+        x, nc_self = B.attn_apply(cfg, p["self"], x, positions, self_cache, causal=True)
+        cross_cache = {"xk": c["xk"], "xv": c["xv"], "xlen": c["xk"].shape[1]}
+        x, _ = B.attn_apply(cfg, p["cross"], x, positions, cross_cache, causal=False,
+                            kv_source=jnp.zeros((Bsz, 1, cfg.d_model), x.dtype))
+        x = B.mlp_apply(cfg, p["c"], x)
+        return x, {"b0": {"k": nc_self["k"], "v": nc_self["v"], "xk": c["xk"], "xv": c["xv"]}}
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_unit"], cache["dec_unit"]))
+    x = B.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x.astype(cfg.compute_dtype), params["lm_head"].astype(cfg.compute_dtype)
+    )
+    return logits, {"dec_unit": new_cache}

@@ -1,0 +1,380 @@
+"""Recurrent temporal mixers: RG-LRU (RecurrentGemma/Griffin), mLSTM and
+sLSTM (xLSTM).
+
+Sequence forms:
+* RG-LRU — elementwise linear recurrence -> ``jax.lax.associative_scan``
+  (log-depth, sub-quadratic; this is why recurrentgemma runs long_500k).
+* mLSTM — chunked parallel form (matrix memory carried across chunks via
+  ``lax.scan``; quadratic only within a chunk).
+* sLSTM — strictly sequential (recurrent weights) -> ``lax.scan`` over time.
+
+Each block also has a single-step decode path operating on a small state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
+
+from repro.common.params import Param
+from repro.configs.base import ModelConfig
+from repro.models.blocks import rmsnorm_apply, rmsnorm_specs
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d (width w) used by griffin + mlstm
+# ---------------------------------------------------------------------------
+
+
+def conv1d_specs(width: int, channels: int) -> Dict[str, Param]:
+    return {"w": Param((width, channels), (None, "rnn"), init="normal", scale=0.1)}
+
+
+def conv1d_apply(params, x: jnp.ndarray, state: Optional[jnp.ndarray] = None):
+    """x: [B,S,C]. state (decode): [B,w-1,C] previous inputs. Returns
+    (y, new_state)."""
+    w = params["w"].shape[0]
+    if state is None:
+        pad = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+        new_state = pad[:, -(w - 1):, :] if w > 1 else None
+    else:
+        pad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        new_state = pad[:, -(w - 1):, :] if w > 1 else None
+    y = sum(
+        pad[:, i : pad.shape[1] - (w - 1 - i), :] * params["w"][i].astype(x.dtype)
+        for i in range(w)
+    )
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin eq. 3-4): per-channel gated linear recurrence
+# ---------------------------------------------------------------------------
+
+_C_RGLRU = 8.0
+
+
+def rglru_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, r = cfg.d_model, cfg.rnn_width
+    return {
+        "norm": rmsnorm_specs(d),
+        "wx": Param((d, r), ("embed", "rnn")),
+        "wgate": Param((d, r), ("embed", "rnn")),
+        "conv": conv1d_specs(cfg.conv_width, r),
+        "lam": Param((r,), ("rnn",), init="normal", scale=1.0),  # Λ
+        "wa": Param((r,), ("rnn",), init="normal", scale=0.1),   # recurrence gate
+        "ba": Param((r,), ("rnn",), init="zeros"),
+        "wi": Param((r,), ("rnn",), init="normal", scale=0.1),   # input gate
+        "bi": Param((r,), ("rnn",), init="zeros"),
+        "wo": Param((r, d), ("rnn", "embed")),
+    }
+
+
+def _rglru_coeffs(params, u, dtype):
+    """u: [...,r] branch input -> (log_a, gated_in) fp32."""
+    uf = u.astype(jnp.float32)
+    r_gate = jax.nn.sigmoid(uf * params["wa"].astype(jnp.float32) + params["ba"].astype(jnp.float32))
+    i_gate = jax.nn.sigmoid(uf * params["wi"].astype(jnp.float32) + params["bi"].astype(jnp.float32))
+    log_a = -_C_RGLRU * r_gate * jax.nn.softplus(params["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    scaled_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * (i_gate * uf)
+    return a, scaled_in
+
+
+def rglru_scan(params, u: jnp.ndarray, chunk: int = 2048) -> jnp.ndarray:
+    """u: [B,S,r] -> h: [B,S,r].
+
+    Chunked: ``lax.scan`` over S/chunk blocks carrying the boundary state,
+    ``associative_scan`` (log-depth) within each block.  Bounds the
+    log-depth scan's materialized intermediates to O(chunk) instead of O(S)
+    — the un-chunked version costs ~log2(S) full-sequence f32 copies, which
+    at 32k x 4096 width was 168 GB/device."""
+    a, b = _rglru_coeffs(params, u, u.dtype)
+    B, S, r = a.shape
+    chunk = min(chunk, S)
+    nc = S // chunk
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    if nc <= 1:
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        return h.astype(u.dtype)
+
+    ac = jnp.moveaxis(a.reshape(B, nc, chunk, r), 1, 0)
+    bc = jnp.moveaxis(b.reshape(B, nc, chunk, r), 1, 0)
+
+    def body(h0, xs):
+        ai, bi = xs
+        a_cum, b_cum = jax.lax.associative_scan(combine, (ai, bi), axis=1)
+        h = a_cum * h0[:, None, :] + b_cum
+        return h[:, -1, :], h
+
+    h_last0 = jnp.zeros((B, r), jnp.float32)
+    _, hs = jax.lax.scan(body, h_last0, (ac, bc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, r)
+    return h.astype(u.dtype)
+
+
+def rglru_step(params, u: jnp.ndarray, h_prev: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """u: [B,1,r]; h_prev: [B,r]."""
+    a, b = _rglru_coeffs(params, u[:, 0], u.dtype)
+    h = a * h_prev.astype(jnp.float32) + b
+    return h.astype(u.dtype)[:, None], h
+
+
+def rglru_block_apply(
+    cfg: ModelConfig, params, x: jnp.ndarray, cache: Optional[Dict] = None
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Griffin recurrent block: gate branch x (conv -> RG-LRU) branch."""
+    cdt = cfg.compute_dtype
+    h = rmsnorm_apply(params["norm"], x, cfg.norm_eps).astype(cdt)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", h, params["wgate"].astype(cdt)))
+    u = jnp.einsum("bsd,dr->bsr", h, params["wx"].astype(cdt))
+    new_cache = None
+    if cache is None:
+        u, _ = conv1d_apply(params["conv"], u)
+        r = rglru_scan(params, u)
+    else:
+        u, conv_state = conv1d_apply(params["conv"], u, cache["conv"])
+        r, h_state = rglru_step(params, u, cache["h"])
+        new_cache = {"conv": conv_state, "h": h_state}
+    y = jnp.einsum("bsr,rd->bsd", r * gate, params["wo"].astype(cdt))
+    y = _checkpoint_name(y, "block_out")
+    return x + y.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM): matrix memory, chunked parallel over sequence
+# ---------------------------------------------------------------------------
+
+
+def mlstm_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    m = 2 * d  # official projection factor 2
+    nh = cfg.num_heads
+    return {
+        "norm": rmsnorm_specs(d),
+        "wup": Param((d, 2 * m), ("embed", "rnn")),
+        "conv": conv1d_specs(cfg.conv_width, m),
+        "wq": Param((m, m), ("rnn", None)),
+        "wk": Param((m, m), ("rnn", None)),
+        "wv": Param((m, m), ("rnn", None)),
+        "wi": Param((m, nh), ("rnn", None), init="normal", scale=0.02),
+        "bi": Param((nh,), (None,), init="zeros"),
+        "wf": Param((m, nh), ("rnn", None), init="normal", scale=0.02),
+        "bf": Param((nh,), (None,), init="ones"),
+        "gnorm": rmsnorm_specs(m // nh),
+        "wdown": Param((m, d), ("rnn", "embed")),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, log_i, log_f, chunk: int):
+    """Chunked-parallel mLSTM. q,k,v: [B,S,nh,dh]; log_i/log_f: [B,S,nh]
+    (fp32).  Returns h: [B,S,nh,dh]."""
+    B, S, nh, dh = q.shape
+    nc = S // chunk
+    qc = q.reshape(B, nc, chunk, nh, dh)
+    kc = k.reshape(B, nc, chunk, nh, dh)
+    vc = v.reshape(B, nc, chunk, nh, dh)
+    li = log_i.reshape(B, nc, chunk, nh)
+    lf = log_f.reshape(B, nc, chunk, nh)
+    # move chunk axis first for scan
+    qc, kc, vc = (jnp.moveaxis(t, 1, 0) for t in (qc, kc, vc))
+    li, lf = (jnp.moveaxis(t, 1, 0) for t in (li, lf))
+    scale = 1.0 / math.sqrt(dh)
+
+    def body(carry, xs):
+        C_prev, n_prev, m_prev = carry  # [B,nh,dh,dh], [B,nh,dh], [B,nh]
+        qb, kb, vb, lib, lfb = xs  # [B,c,nh,dh] / [B,c,nh]
+        fcum = jnp.cumsum(lfb, axis=1)  # [B,c,nh]
+        ftot = fcum[:, -1]
+        # intra-chunk decay matrix: D[t,s] = exp(fcum_t - fcum_s + i_s), s<=t
+        lD = fcum[:, :, None, :] - fcum[:, None, :, :] + lib[:, None, :, :]
+        tri = jnp.tril(jnp.ones((qb.shape[1], qb.shape[1]), bool))
+        lD = jnp.where(tri[None, :, :, None], lD, -jnp.inf)
+        # inter-chunk coefficient per target t: exp(fcum_t)
+        l_inter = fcum  # [B,c,nh]
+        m_intra = jnp.max(lD, axis=2)  # [B,c,nh]
+        m_new = jnp.maximum(m_intra, l_inter + m_prev[:, None, :])
+        m_new = jnp.maximum(m_new, -1e30)
+        D = jnp.exp(lD - m_new[:, :, None, :])  # [B,c,c,nh]
+        inter_w = jnp.exp(l_inter + m_prev[:, None, :] - m_new)  # [B,c,nh]
+
+        s_qk = jnp.einsum("bthd,bshd->btsh", qb.astype(jnp.float32), kb.astype(jnp.float32)) * scale
+        intra = jnp.einsum("btsh,bshd->bthd", s_qk * D, vb.astype(jnp.float32))
+        inter = jnp.einsum("bthd,bhde->bthe", qb.astype(jnp.float32) * scale, C_prev) * inter_w[..., None]
+        num = intra + inter
+        # normalizer
+        qn = jnp.einsum("bthd,bhd->bth", qb.astype(jnp.float32) * scale, n_prev) * inter_w
+        denom = jnp.abs(jnp.einsum("btsh->bth", s_qk * D) + qn)
+        h = num / jnp.maximum(denom, jnp.exp(-m_new))[..., None]
+
+        # carry updates (decayed to end of chunk)
+        m_next = jnp.maximum(ftot + m_prev, jnp.max(lib + (ftot[:, None] - fcum), axis=1))
+        w_old = jnp.exp(ftot + m_prev - m_next)  # [B,nh]
+        w_k = jnp.exp(lib + (ftot[:, None] - fcum) - m_next[:, None])  # [B,c,nh]
+        C_new = C_prev * w_old[..., None, None] + jnp.einsum(
+            "bsh,bshd,bshe->bhde", w_k, kb.astype(jnp.float32), vb.astype(jnp.float32)
+        )
+        n_new = n_prev * w_old[..., None] + jnp.einsum("bsh,bshd->bhd", w_k, kb.astype(jnp.float32))
+        return (C_new, n_new, m_next), h
+
+    C0 = jnp.zeros((B, nh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, nh, dh), jnp.float32)
+    m0 = jnp.full((B, nh), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, li, lf))
+    return jnp.moveaxis(hs, 0, 1).reshape(B, S, nh, dh)
+
+
+def mlstm_step(q, k, v, log_i, log_f, state):
+    """Single decode step. q,k,v: [B,1,nh,dh]; log_i/f: [B,1,nh];
+    state = (C [B,nh,dh,dh], n [B,nh,dh], m [B,nh])."""
+    C_prev, n_prev, m_prev = state
+    dh = q.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+    li, lf = log_i[:, 0], log_f[:, 0]
+    m_new = jnp.maximum(lf + m_prev, li)
+    f_w = jnp.exp(lf + m_prev - m_new)
+    i_w = jnp.exp(li - m_new)
+    kb = k[:, 0].astype(jnp.float32)
+    vb = v[:, 0].astype(jnp.float32)
+    C = C_prev * f_w[..., None, None] + i_w[..., None, None] * jnp.einsum("bhd,bhe->bhde", kb, vb)
+    n = n_prev * f_w[..., None] + i_w[..., None] * kb
+    qb = q[:, 0].astype(jnp.float32) * scale
+    num = jnp.einsum("bhd,bhde->bhe", qb, C)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qb, n)), jnp.exp(-m_new))
+    h = (num / denom[..., None])[:, None]
+    return h, (C, n, m_new)
+
+
+def mlstm_block_apply(
+    cfg: ModelConfig, params, x: jnp.ndarray, cache: Optional[Dict] = None,
+    chunk: int = 256,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    cdt = cfg.compute_dtype
+    B, S, d = x.shape
+    nh = cfg.num_heads
+    m = params["wq"].shape[0]
+    dh = m // nh
+    h = rmsnorm_apply(params["norm"], x, cfg.norm_eps).astype(cdt)
+    up = jnp.einsum("bsd,dm->bsm", h, params["wup"].astype(cdt))
+    u, z = up[..., :m], up[..., m:]
+    new_cache: Optional[Dict] = None
+    if cache is None:
+        uc, _ = conv1d_apply(params["conv"], u)
+    else:
+        uc, conv_state = conv1d_apply(params["conv"], u, cache["conv"])
+    uact = jax.nn.silu(uc)
+    q = jnp.einsum("bsm,mn->bsn", uact, params["wq"].astype(cdt)).reshape(B, S, nh, dh)
+    k = jnp.einsum("bsm,mn->bsn", uact, params["wk"].astype(cdt)).reshape(B, S, nh, dh)
+    v = jnp.einsum("bsm,mn->bsn", u, params["wv"].astype(cdt)).reshape(B, S, nh, dh)
+    log_i = (jnp.einsum("bsm,mh->bsh", uact, params["wi"].astype(cdt)) + params["bi"].astype(cdt)).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(
+        (jnp.einsum("bsm,mh->bsh", uact, params["wf"].astype(cdt)) + params["bf"].astype(cdt)).astype(jnp.float32)
+    )
+    if cache is None:
+        hseq = _mlstm_chunk_scan(q, k, v, log_i, log_f, min(chunk, S))
+    else:
+        hseq, state = mlstm_step(q, k, v, log_i, log_f, cache["state"])
+        new_cache = {"conv": conv_state, "state": state}
+    hseq = rmsnorm_apply(params["gnorm"], hseq.astype(cdt), cfg.norm_eps)
+    out = hseq.reshape(B, S, m) * jax.nn.silu(z)
+    y = jnp.einsum("bsm,md->bsd", out, params["wdown"].astype(cdt))
+    return x + y.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM): scalar memory with recurrent block-diagonal weights
+# ---------------------------------------------------------------------------
+
+
+def slstm_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    nh = cfg.num_heads
+    dh = d // nh
+    ff = max(int(d * 4 / 3) // 64 * 64, 64)
+    return {
+        "norm": rmsnorm_specs(d),
+        "wz": Param((d, d), ("embed", "rnn")),
+        "wi": Param((d, d), ("embed", "rnn")),
+        "wf": Param((d, d), ("embed", "rnn")),
+        "wo": Param((d, d), ("embed", "rnn")),
+        "rz": Param((nh, dh, dh), (None, None, None), init="normal", scale=0.05),
+        "ri": Param((nh, dh, dh), (None, None, None), init="normal", scale=0.05),
+        "rf": Param((nh, dh, dh), (None, None, None), init="normal", scale=0.05),
+        "ro": Param((nh, dh, dh), (None, None, None), init="normal", scale=0.05),
+        "gnorm": rmsnorm_specs(d),
+        # gated FFN (factor 4/3) — part of the sLSTM block in xLSTM
+        "ff_w1": Param((d, ff), ("embed", "mlp")),
+        "ff_w3": Param((d, ff), ("embed", "mlp")),
+        "ff_w2": Param((ff, d), ("mlp", "embed")),
+    }
+
+
+def _slstm_cell(params, xz, xi, xf, xo, state, nh, dh):
+    """One timestep. x*: [B,d] pre-activations from input; state=(c,n,h,m)."""
+    c, n, h, m = state
+    B = xz.shape[0]
+    hh = h.reshape(B, nh, dh)
+
+    def rec(w):
+        return jnp.einsum("bhd,hde->bhe", hh, w.astype(jnp.float32)).reshape(B, -1)
+
+    z = jnp.tanh(xz + rec(params["rz"]))
+    i_t = xi + rec(params["ri"])
+    f_t = xf + rec(params["rf"])
+    o = jax.nn.sigmoid(xo + rec(params["ro"]))
+    logf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(logf + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    c_new = f_p * c + i_p * z
+    n_new = jnp.maximum(f_p * n + i_p, 1e-6)
+    h_new = o * c_new / n_new
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_block_apply(
+    cfg: ModelConfig, params, x: jnp.ndarray, cache: Optional[Dict] = None
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    cdt = cfg.compute_dtype
+    B, S, d = x.shape
+    nh = cfg.num_heads
+    dh = d // nh
+    hin = rmsnorm_apply(params["norm"], x, cfg.norm_eps).astype(cdt)
+    xz = jnp.einsum("bsd,de->bse", hin, params["wz"].astype(cdt)).astype(jnp.float32)
+    xi = jnp.einsum("bsd,de->bse", hin, params["wi"].astype(cdt)).astype(jnp.float32)
+    xf = jnp.einsum("bsd,de->bse", hin, params["wf"].astype(cdt)).astype(jnp.float32)
+    xo = jnp.einsum("bsd,de->bse", hin, params["wo"].astype(cdt)).astype(jnp.float32)
+
+    if cache is None:
+        state0 = tuple(
+            jnp.zeros((B, d), jnp.float32) if i != 3 else jnp.full((B, d), -1e30, jnp.float32)
+            for i in range(4)
+        )
+
+        def body(state, xs):
+            s = _slstm_cell(params, *xs, state, nh, dh)
+            return s, s[2]
+
+        _, hs = jax.lax.scan(
+            body, state0, tuple(jnp.moveaxis(t, 1, 0) for t in (xz, xi, xf, xo))
+        )
+        hseq = jnp.moveaxis(hs, 0, 1)  # [B,S,d]
+        new_cache = None
+    else:
+        state = cache["state"]
+        state = _slstm_cell(params, xz[:, 0], xi[:, 0], xf[:, 0], xo[:, 0], state, nh, dh)
+        hseq = state[2][:, None]
+        new_cache = {"state": state}
+    hseq = rmsnorm_apply(params["gnorm"], hseq.astype(cdt), cfg.norm_eps)
+    # gated FFN
+    u = jnp.einsum("bsd,df->bsf", hseq, params["ff_w1"].astype(cdt))
+    g = jnp.einsum("bsd,df->bsf", hseq, params["ff_w3"].astype(cdt))
+    y = jnp.einsum("bsf,fd->bsd", jax.nn.silu(u) * g, params["ff_w2"].astype(cdt))
+    return x + y.astype(x.dtype), new_cache

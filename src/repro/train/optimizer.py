@@ -1,0 +1,141 @@
+"""Optimizers in pure JAX: AdamW (dtype-configurable states) and Adafactor
+(factored second moment — what makes arctic-480b's optimizer fit HBM).
+
+Both expose ``<name>_specs`` (Param trees for the dry-run / sharded init)
+and ``<name>_init`` / ``<name>_update``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.params import Param, is_param
+from repro.configs.base import RunConfig
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_specs(param_specs: PyTree, run_cfg: RunConfig) -> PyTree:
+    dt = run_cfg.opt_state_dtype
+
+    def per_param(p: Param):
+        return {
+            "m": Param(p.shape, p.axes, dt, init="zeros"),
+            "v": Param(p.shape, p.axes, dt, init="zeros"),
+        }
+
+    return jax.tree.map(per_param, param_specs, is_leaf=is_param)
+
+
+def adamw_update(
+    grads: PyTree, opt_state: PyTree, params: PyTree, step: jnp.ndarray,
+    run_cfg: RunConfig, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+):
+    lr, wd = run_cfg.learning_rate, run_cfg.weight_decay
+    t = step.astype(jnp.float32) + 1.0
+    corr1 = 1.0 - b1 ** t
+    corr2 = 1.0 - b2 ** t
+
+    def upd(g, s, p):
+        gf = g.astype(jnp.float32)
+        m = b1 * s["m"].astype(jnp.float32) + (1 - b1) * gf
+        v = b2 * s["v"].astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = m / corr1
+        vhat = v / corr2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        dt = s["m"].dtype
+        return new_p, {"m": m.astype(dt), "v": v.astype(dt)}
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_s = treedef.flatten_up_to(opt_state)
+    flat_p = jax.tree.leaves(params)
+    new_p, new_s = zip(*[upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)])
+    return jax.tree.unflatten(treedef, new_p), jax.tree.unflatten(treedef, new_s)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern, 2018) — factored second moments
+# ---------------------------------------------------------------------------
+
+
+def _factored(p: Param) -> bool:
+    return len(p.shape) >= 2 and p.shape[-1] >= 8 and p.shape[-2] >= 8
+
+
+def adafactor_specs(param_specs: PyTree, run_cfg: RunConfig) -> PyTree:
+    def per_param(p: Param):
+        if _factored(p):
+            return {
+                "vr": Param(p.shape[:-1], p.axes[:-1], jnp.float32, init="zeros"),
+                "vc": Param(p.shape[:-2] + p.shape[-1:], p.axes[:-2] + p.axes[-1:],
+                            jnp.float32, init="zeros"),
+            }
+        return {"v": Param(p.shape, p.axes, jnp.float32, init="zeros")}
+
+    return jax.tree.map(per_param, param_specs, is_leaf=is_param)
+
+
+def adafactor_update(
+    grads: PyTree, opt_state: PyTree, params: PyTree, step: jnp.ndarray,
+    run_cfg: RunConfig, b2: float = 0.999, eps: float = 1e-30, clip: float = 1.0,
+):
+    lr = run_cfg.learning_rate
+
+    def upd(g, s, p):
+        # Keep tensor-sized math in the gradient dtype: the f32 upcast of a
+        # multi-GB grad leaf (arctic's expert stacks) would spike HBM.  The
+        # factored stats (vr/vc — tiny) stay f32; reductions accumulate f32
+        # inside the fused reduce without materializing an f32 copy.
+        g2_mean_r = jnp.mean(jnp.square(g.astype(jnp.float32)), axis=-1)
+        if "vr" in s:
+            g2_mean_c = jnp.mean(jnp.square(g.astype(jnp.float32)), axis=-2)
+            vr = b2 * s["vr"] + (1 - b2) * (g2_mean_r + eps)
+            vc = b2 * s["vc"] + (1 - b2) * (g2_mean_c + eps)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+            precond = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+            scale = jax.lax.rsqrt(jnp.maximum(precond, eps)).astype(g.dtype)
+            update = g * scale
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            v = b2 * s["v"] + (1 - b2) * (
+                jnp.square(g.astype(jnp.float32)) + eps
+            )
+            update = g * jax.lax.rsqrt(jnp.maximum(v, eps)).astype(g.dtype)
+            new_s = {"v": v}
+        # update clipping (RMS) — reduction in f32, scaling in g dtype
+        rms = jnp.sqrt(jnp.mean(jnp.square(update.astype(jnp.float32))) + eps)
+        factor = (1.0 / jnp.maximum(1.0, rms / clip)).astype(g.dtype)
+        new_p = (p - (lr * factor) * update.astype(p.dtype)).astype(p.dtype)
+        return new_p, new_s
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_s = treedef.flatten_up_to(opt_state)
+    flat_p = jax.tree.leaves(params)
+    new_p, new_s = zip(*[upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)])
+    return jax.tree.unflatten(treedef, new_p), jax.tree.unflatten(treedef, new_s)
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+
+def opt_specs(param_specs: PyTree, run_cfg: RunConfig) -> PyTree:
+    if run_cfg.optimizer == "adafactor":
+        return adafactor_specs(param_specs, run_cfg)
+    return adamw_specs(param_specs, run_cfg)
+
+
+def opt_update(grads, opt_state, params, step, run_cfg: RunConfig):
+    if run_cfg.optimizer == "adafactor":
+        return adafactor_update(grads, opt_state, params, step, run_cfg)
+    return adamw_update(grads, opt_state, params, step, run_cfg)

@@ -1,0 +1,56 @@
+"""Train-state construction (concrete + abstract) and sharding trees."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.params import (
+    Param, abstract_params, init_params, is_param,
+)
+from repro.configs.base import ModelConfig, RunConfig
+from repro.distributed.sharding import param_specs_tree
+from repro.models import encdec
+from repro.models.lm import lm_cache_specs, lm_specs
+from repro.train.optimizer import opt_specs
+
+
+def model_specs(cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return encdec.encdec_specs(cfg)
+    return lm_specs(cfg)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.is_encoder_decoder:
+        enc_len = max(max_len // cfg.dec_len_ratio, 1500)
+        # decoder self-cache is max_len; cross cache fixed at whisper's 1500
+        return encdec.encdec_cache_specs(cfg, batch, max_len, enc_len=1500)
+    return lm_cache_specs(cfg, batch, max_len)
+
+
+def train_state_specs(cfg: ModelConfig, run_cfg: RunConfig) -> Dict[str, Any]:
+    p = model_specs(cfg)
+    # parameters may be stored in a non-fp32 dtype (e.g. arctic bf16)
+    p = jax.tree.map(
+        lambda q: Param(q.shape, q.axes, cfg.param_dtype, q.init, q.scale),
+        p, is_leaf=is_param,
+    )
+    return {
+        "params": p,
+        "opt": opt_specs(p, run_cfg),
+        "step": Param((), (), jnp.int32, init="zeros"),
+    }
+
+
+def init_train_state(key: jax.Array, cfg: ModelConfig, run_cfg: RunConfig):
+    return init_params(key, train_state_specs(cfg, run_cfg))
+
+
+def abstract_train_state(cfg: ModelConfig, run_cfg: RunConfig):
+    return abstract_params(train_state_specs(cfg, run_cfg))
+
+
+def state_shardings(cfg: ModelConfig, run_cfg: RunConfig, mesh, rules=None):
+    return param_specs_tree(train_state_specs(cfg, run_cfg), mesh, rules)

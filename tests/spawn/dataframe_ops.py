@@ -1,0 +1,72 @@
+import os
+# XLA_FLAGS provided by conftest
+import sys; # PYTHONPATH provided by conftest
+import jax, jax.numpy as jnp, numpy as np
+from repro.launch.mesh import make_mesh
+from repro.dataframe.table import Table
+from repro.dataframe import ops_dist as D
+
+mesh = make_mesh((8,), ("data",))
+rng = np.random.default_rng(0)
+N = 4096
+keys = rng.integers(0, 1000, N).astype(np.int32)
+vals = rng.normal(size=N).astype(np.float32)
+t = Table.from_columns({"k": keys, "v": vals}, mesh)
+
+# shuffle: equal keys co-located
+s, dropped = D.shuffle(t, "k")
+print("shuffle dropped:", dropped, "valid:", s.num_valid, "/", N)
+assert dropped == 0 and s.num_valid == N
+
+# sort
+st, dropped = D.sort(t, "k")
+out = st.to_numpy()
+# within each shard sorted; global: shard i max <= shard i+1 min
+kk = np.asarray(st.col("k")); vv = np.asarray(st.valid)
+per = kk.shape[0] // 8
+glob = []
+for i in range(8):
+    seg = kk[i*per:(i+1)*per][vv[i*per:(i+1)*per]]
+    assert np.all(np.diff(seg) >= 0), "shard not sorted"
+    glob.append(seg)
+for i in range(7):
+    if len(glob[i]) and len(glob[i+1]):
+        assert glob[i].max() <= glob[i+1].min(), "splitters wrong"
+allk = np.concatenate(glob)
+assert dropped == 0 and len(allk) == N and np.all(np.sort(keys) == allk)
+print("sort OK, dropped:", dropped)
+
+# join
+rkeys = np.arange(1000).astype(np.int32)
+rvals = (rkeys * 10).astype(np.float32)
+r = Table.from_columns({"k": rkeys, "w": rvals}, mesh)
+j, dropped = D.join(t, r, "k")
+jo = j.to_numpy()
+assert np.all(jo["w"] == jo["k"] * 10), "join values wrong"
+print("join OK rows:", len(jo["k"]), "dropped:", dropped)
+assert len(jo["k"]) == N and dropped == 0
+
+# groupby
+g, dropped = D.groupby_sum(t, "k", ["v"])
+go = g.to_numpy()
+import collections
+ref = collections.defaultdict(float)
+for k, v in zip(keys, vals): ref[int(k)] += float(v)
+got = dict(zip(go["k"].tolist(), go["v"].tolist()))
+for k in list(ref)[:50]:
+    assert abs(ref[k] - got[k]) < 1e-3, (k, ref[k], got.get(k))
+print("groupby OK groups:", len(go["k"]))
+
+# reduce
+rs = D.reduce_sum(t, ["v"])
+assert abs(rs["v"] - vals.sum()) < 1e-2
+print("reduce OK:", rs)
+
+# loader
+from repro.bridge.loader import ZeroCopyLoader
+tl = Table.from_columns({"f1": vals, "f2": vals*2, "y": keys}, mesh)
+ld = ZeroCopyLoader(tl, ["f1","f2"], "y", 256)
+feats, labels, mask = next(iter(ld))
+print("loader batch:", feats.shape, labels.shape, feats.sharding.spec if hasattr(feats,'sharding') else None)
+assert feats.shape == (256, 2)
+print("ALL DF TESTS PASS")

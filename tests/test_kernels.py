@@ -1,0 +1,126 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode),
+plus hypothesis property tests on kernel invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import decode_attention as da
+from repro.kernels import flash_attention as fa
+from repro.kernels import hash_partition as hp
+from repro.kernels import ref
+from repro.kernels import rmsnorm as rn
+from repro.kernels import ops
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("B,H,KV,S,D", [
+    (1, 4, 4, 128, 64),    # MHA
+    (2, 8, 2, 256, 64),    # GQA 4x
+    (1, 4, 1, 128, 128),   # MQA
+    (1, 8, 8, 192, 32),    # non-128 block tail
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(B, H, KV, S, D, dtype):
+    q = jax.random.normal(KEY, (B, H, S, D), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, KV, S, D), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, KV, S, D), dtype)
+    got = fa.flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                             interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_causality():
+    """Output at position i must not depend on tokens > i."""
+    B, H, S, D = 1, 2, 128, 64
+    q = jax.random.normal(KEY, (B, H, S, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, H, S, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, H, S, D))
+    out1 = fa.flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                              interpret=True)
+    k2 = k.at[:, :, 64:].set(99.0)
+    v2 = v.at[:, :, 64:].set(-99.0)
+    out2 = fa.flash_attention(q, k2, v2, causal=True, block_q=64, block_k=64,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(out1[:, :, :64]),
+                               np.asarray(out2[:, :, :64]), atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("B,H,KV,S,D,bk", [
+    (2, 8, 2, 512, 64, 128),
+    (1, 4, 4, 256, 128, 64),
+    (4, 16, 1, 1024, 64, 256),
+])
+def test_decode_attention_matches_ref(B, H, KV, S, D, bk):
+    q = jax.random.normal(KEY, (B, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, KV, S, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, KV, S, D))
+    cl = jnp.asarray(S * 3 // 4, jnp.int32)
+    got = da.decode_attention(q, k, v, cl, block_k=bk, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, cl)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@given(cache_len=st.integers(min_value=1, max_value=256))
+@settings(deadline=None, max_examples=10)
+def test_decode_attention_cache_len_property(cache_len):
+    """Positions >= cache_len never contribute."""
+    B, H, KV, S, D = 1, 2, 2, 256, 32
+    q = jax.random.normal(KEY, (B, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, KV, S, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, KV, S, D))
+    cl = jnp.asarray(cache_len, jnp.int32)
+    base = da.decode_attention(q, k, v, cl, block_k=64, interpret=True)
+    k2 = k.at[:, :, cache_len:].set(7.0)
+    v2 = v.at[:, :, cache_len:].set(-7.0)
+    got = da.decode_attention(q, k2, v2, cl, block_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(got),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(32, 128), (4, 17, 256), (1, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_ref(shape, dtype):
+    x = jax.random.normal(KEY, shape, dtype)
+    w = jax.random.normal(jax.random.PRNGKey(3), (shape[-1],), dtype)
+    got = rn.rmsnorm(x, w, block_rows=16, interpret=True)
+    want = ref.rmsnorm_ref(x, w)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@given(n=st.integers(100, 5000), p=st.sampled_from([4, 16, 64]))
+@settings(deadline=None, max_examples=10)
+def test_hash_partition_histogram_property(n, p):
+    """Per-block histograms sum to the exact global histogram."""
+    keys = jax.random.randint(jax.random.PRNGKey(n), (n,), 0, 10_000)
+    hist = hp.hash_partition_histogram(keys, num_buckets=p, block=512,
+                                       interpret=True)
+    want = ref.hash_partition_histogram_ref(keys, num_buckets=p)
+    np.testing.assert_array_equal(np.asarray(hist.sum(0)), np.asarray(want))
+    assert int(hist.sum()) == n
+
+
+def test_partition_order_bucket_contiguous():
+    keys = jax.random.randint(KEY, (5000,), 0, 10_000)
+    order, offsets = hp.partition_order(keys, 16, interpret=True)
+    b = np.asarray((ref.hash_u32_ref(keys) % jnp.uint32(16)).astype(jnp.int32))
+    assert np.all(np.diff(b[np.asarray(order)]) >= 0)
+    assert offsets.shape == (16,)
+
+
+def test_ops_dispatch_ref_path():
+    """impl='ref' and impl='interpret' agree (CPU container has no TPU)."""
+    q = jax.random.normal(KEY, (1, 4, 64, 32))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 64, 32))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 4, 64, 32))
+    a = ops.flash_attention(q, k, v, impl="ref")
+    b = ops.flash_attention(q, k, v, impl="interpret", block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5, rtol=2e-5)

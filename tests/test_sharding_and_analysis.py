@@ -1,0 +1,134 @@
+"""Unit + property tests: sharding-rule derivation, padded-GQA search,
+trip-count-aware HLO cost analysis (single-device compile)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.distributed import hlo_analysis as ha
+from repro.distributed.sharding import merge_rules, spec_for
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+RULES = merge_rules()
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_spec_basic_weight():
+    s = spec_for(("embed", "mlp"), (2048, 5632), MESH, RULES)
+    assert s == P("data", "model")
+
+
+def test_spec_divisibility_fallback():
+    # 10 kv heads don't divide the 16-way model axis -> replicated
+    s = spec_for(("embed", "kv_heads", None), (2048, 10, 64), MESH, RULES)
+    assert s == P("data")
+
+
+def test_spec_axis_exclusivity():
+    # two dims both wanting "model": first wins, second drops
+    s = spec_for(("heads", "mlp"), (32, 64), MESH, RULES)
+    assert s == P("model")
+
+
+def test_spec_multi_axis_batch():
+    s = spec_for(("act_batch", None), (256, 128), MESH3, RULES)
+    assert s == P(("pod", "data"))
+    # batch=1 (long_500k): everything falls back
+    s1 = spec_for(("act_batch", None), (1, 128), MESH3, RULES)
+    assert s1 == P()
+
+
+@given(H=st.integers(1, 128), ratio=st.sampled_from([1, 2, 4, 7, 8]))
+@settings(deadline=None, max_examples=40)
+def test_padded_gqa_properties(H, ratio):
+    if H % ratio:
+        H = H * ratio
+    KV = max(H // ratio // 1, 1)
+    H = KV * ratio
+    cfg = get_config("tinyllama-1.1b", smoke=True).with_overrides(
+        num_heads=H, num_kv_heads=KV, head_pad_multiple=16, d_model=H * 16,
+        head_dim=16,
+    )
+    Hp, KVp = cfg.padded_gqa()
+    assert Hp % 16 == 0
+    assert Hp >= H and KVp >= KV
+    assert Hp % KVp == 0  # uniform groups
+    assert Hp <= 2 * (H + 16 * ratio + 16)  # sane padding bound
+
+
+def test_hlo_trip_count_flops():
+    """scan body FLOPs must be multiplied by the trip count."""
+    L, D = 8, 64
+
+    def f(ws, x):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return jnp.sum(y)
+
+    ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    xs = jax.ShapeDtypeStruct((16, D), jnp.float32)
+    comp = jax.jit(f).lower(ws, xs).compile()
+    res = ha.analyze(comp.as_text())
+    expected_dot = 2 * 16 * D * D * L
+    assert res["flops_per_device"] >= expected_dot
+    assert res["flops_per_device"] < expected_dot * 2.5
+    assert res["unknown_trip_loops"] == 0
+
+
+def test_hlo_unrolled_matches_scan():
+    D, L = 32, 6
+
+    def scanned(ws, x):
+        def body(c, w):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    def unrolled(ws, x):
+        for i in range(L):
+            x = x @ ws[i]
+        return x
+
+    ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    xs = jax.ShapeDtypeStruct((8, D), jnp.float32)
+    a = ha.analyze(jax.jit(scanned).lower(ws, xs).compile().as_text())
+    b = ha.analyze(jax.jit(unrolled).lower(ws, xs).compile().as_text())
+    ratio = a["flops_per_device"] / max(b["flops_per_device"], 1)
+    assert 0.7 < ratio < 1.5, (a["flops_per_device"], b["flops_per_device"])
+
+
+def test_shape_parsing():
+    assert ha._shape_bytes("f32[16,256]{1,0}") == 16 * 256 * 4
+    assert ha._shape_bytes("(s32[], bf16[8,8]{1,0})") == 4 + 128
+    assert ha._shape_elems("pred[2,3]") == 6
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_full_config_matches_assignment(arch):
+    """Full configs carry the exact published dimensions."""
+    cfg = get_config(arch)
+    expect = {
+        "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+        "minicpm3-4b": (62, 2560, 40, 40, 6400, 73448),
+        "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expect, f"{arch}: {got} != {expect}"

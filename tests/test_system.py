@@ -1,0 +1,129 @@
+"""End-to-end behaviour tests for the Deep RC system: the paper's pipeline
+(data engineering -> zero-copy bridge -> DL training -> postprocess) under
+the pilot runtime, plus subprocess-spawned multi-device suites."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.agent import RemoteAgent
+from repro.core.bridge import cylon_stage, data_bridge, dl_stage
+from repro.core.pilot import PilotDescription, PilotManager
+from repro.core.pipeline import Pipeline, run_pipelines
+from repro.core.task import TaskDescription, TaskState
+from repro.dataframe.table import Table
+
+
+def test_end_to_end_pipeline_single_device():
+    """Full Deep RC flow on the container's single device: synthetic table
+    -> preprocess (filter/project) -> zero-copy loader -> train a linear
+    model -> postprocess metric."""
+    rng = np.random.default_rng(0)
+    N = 2048
+    x1 = rng.normal(size=N).astype(np.float32)
+    x2 = rng.normal(size=N).astype(np.float32)
+    y = 3.0 * x1 - 2.0 * x2 + 0.1 * rng.normal(size=N).astype(np.float32)
+
+    def preprocess(comm, upstream):
+        t = Table.from_columns({"x1": x1, "x2": x2, "y": y})
+        from repro.dataframe.ops_local import filter_rows
+        cols, valid = filter_rows(t.columns, t.valid, jnp.abs(t.col("x1")) < 3.0)
+        return t.with_columns(cols, valid)
+
+    def train(comm, upstream):
+        table = upstream["preprocess"]
+        loader = data_bridge(table, ["x1", "x2"], "y", global_batch=256,
+                             shuffle=True)
+        w = jnp.zeros((2,))
+        b = jnp.zeros(())
+
+        @jax.jit
+        def step(w, b, feats, labels, mask):
+            def loss_fn(wb):
+                w_, b_ = wb
+                pred = feats @ w_ + b_
+                err = jnp.where(mask, pred - labels, 0.0)
+                return jnp.sum(err**2) / jnp.maximum(jnp.sum(mask), 1)
+            l, g = jax.value_and_grad(loss_fn)((w, b))
+            return w - 0.1 * g[0], b - 0.1 * g[1], l
+
+        losses = []
+        for epoch in range(30):
+            for feats, labels, mask in loader.epoch(epoch):
+                w, b, l = step(w, b, feats, labels, mask)
+            losses.append(float(l))
+        return {"w": np.asarray(w), "loss": losses[-1], "first": losses[0]}
+
+    def postprocess(comm, upstream):
+        r = upstream["train"]
+        return {"w_err": float(np.abs(r["w"] - np.array([3.0, -2.0])).max()),
+                **r}
+
+    pm = PilotManager()
+    pilot = pm.submit_pilot(PilotDescription())
+    agent = RemoteAgent(pilot, max_workers=2)
+    pipe = Pipeline("e2e", [
+        cylon_stage("preprocess", preprocess),
+        dl_stage("train", train, deps=("preprocess",)),
+        dl_stage("postprocess", postprocess, deps=("train",), kind="inference"),
+    ])
+    out = pipe.run(agent)
+    assert out["postprocess"]["loss"] < out["postprocess"]["first"]
+    assert out["postprocess"]["w_err"] < 0.2, out["postprocess"]
+    # overhead accounting exists (paper Table 2 decomposition)
+    t = pipe.tasks["train"]
+    assert "communicator" in t.overhead_s and "queue" in t.overhead_s
+
+
+def test_multi_pipeline_shared_pilot():
+    """Table-4 mode: N pipelines under one pilot all complete."""
+    def work(comm, upstream, i):
+        return float(jnp.sum(jnp.ones((64,)) * i))
+
+    pipes = [
+        Pipeline(f"p{i}", [dl_stage("work", lambda c, u, j=i: work(c, u, j))])
+        for i in range(5)
+    ]
+    out = run_pipelines(pipes, max_workers=4)
+    for i in range(5):
+        assert out[f"p{i}"]["work"] == 64.0 * i
+    assert out["_meta"]["wall_s"] > 0
+
+
+def test_task_isolation():
+    """A failing task never breaks its siblings (paper §2.3 claim)."""
+    pm = PilotManager()
+    agent = RemoteAgent(pm.submit_pilot(PilotDescription()), max_workers=2)
+
+    def good(comm):
+        return "ok"
+
+    def bad(comm):
+        raise ValueError("boom")
+
+    tasks = agent.submit([
+        TaskDescription(name="good", fn=good),
+        TaskDescription(name="bad", fn=bad, max_retries=0),
+    ])
+    by_name = {t.description.name: t for t in tasks}
+    assert by_name["good"].state == TaskState.DONE
+    assert by_name["bad"].state == TaskState.FAILED
+    assert "boom" in by_name["bad"].error
+
+
+def test_distributed_dataframe_ops(spawned):
+    """shuffle/sort/join/groupby/reduce on an 8-way mesh (subprocess)."""
+    out = spawned("dataframe_ops.py", devices=8)
+    assert "ALL DF TESTS PASS" in out
+
+
+def test_runtime_fault_tolerance(spawned):
+    """retry, DeviceFailure re-carve, checkpoint reshard (subprocess)."""
+    out = spawned("runtime_ft.py", devices=8)
+    assert "ALL RUNTIME TESTS PASS" in out
+
+
+def test_distributed_extras(spawned):
+    """pipeline parallelism + int8 gradient compression (subprocess)."""
+    out = spawned("distributed_extras.py", devices=8)
+    assert "ALL DISTRIBUTED EXTRAS PASS" in out

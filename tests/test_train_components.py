@@ -1,0 +1,112 @@
+"""Optimizer / loader / checkpoint unit tests + hypothesis properties."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common.params import Param, abstract_params, init_params
+from repro.configs.base import RunConfig
+from repro.train import optimizer as O
+
+
+def _quadratic_target():
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(16, 8)), jnp.float32)
+
+    def loss_fn(params):
+        return jnp.mean((params["w"] - target) ** 2)
+
+    return target, loss_fn
+
+
+@pytest.mark.parametrize("opt", ["adamw", "adafactor"])
+def test_optimizer_converges_on_quadratic(opt):
+    target, loss_fn = _quadratic_target()
+    run = RunConfig(optimizer=opt, learning_rate=0.05, weight_decay=0.0)
+    specs = {"w": Param((16, 8), (None, None))}
+    params = init_params(jax.random.PRNGKey(0), specs)
+    state = init_params(jax.random.PRNGKey(1), O.opt_specs(specs, run))
+
+    @jax.jit
+    def step(params, state, i):
+        g = jax.grad(loss_fn)(params)
+        return O.opt_update(g, state, params, i, run)
+
+    l0 = float(loss_fn(params))
+    for i in range(200):
+        params, state = step(params, state, jnp.asarray(i))
+    assert float(loss_fn(params)) < l0 * 0.05, (opt, l0, float(loss_fn(params)))
+
+
+def test_opt_specs_shapes_match():
+    run_a = RunConfig(optimizer="adamw", opt_state_dtype=jnp.bfloat16)
+    run_f = RunConfig(optimizer="adafactor")
+    specs = {"big": Param((64, 128), ("embed", "mlp")),
+             "vec": Param((64,), (None,))}
+    a = abstract_params(O.opt_specs(specs, run_a))
+    assert a["big"]["m"].shape == (64, 128) and a["big"]["m"].dtype == jnp.bfloat16
+    f = abstract_params(O.opt_specs(specs, run_f))
+    assert f["big"]["vr"].shape == (64,) and f["big"]["vc"].shape == (128,)
+    assert f["vec"]["v"].shape == (64,)  # unfactored for vectors
+
+
+@given(seed=st.integers(0, 1000))
+@settings(deadline=None, max_examples=10)
+def test_clip_by_global_norm_property(seed):
+    from repro.train.step import clip_by_global_norm, global_norm
+
+    tree = {"a": jax.random.normal(jax.random.PRNGKey(seed), (32,)) * 10,
+            "b": jax.random.normal(jax.random.PRNGKey(seed + 1), (4, 4))}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(global_norm(clipped)) <= 1.0 + 1e-4
+    # direction preserved
+    ratio = clipped["a"] / tree["a"]
+    assert float(jnp.std(ratio)) < 1e-5
+
+
+def test_zero_copy_loader_partition_determinism():
+    from repro.bridge.loader import ZeroCopyLoader
+    from repro.dataframe.table import Table
+
+    n = 1024
+    t = Table.from_columns({
+        "f": np.arange(n, dtype=np.float32),
+        "y": np.arange(n, dtype=np.int32),
+    })
+    ld = ZeroCopyLoader(t, ["f"], "y", global_batch=128, shuffle=True, seed=7)
+    e0 = [np.asarray(l) for _, l, _ in ld.epoch(0)]
+    e0b = [np.asarray(l) for _, l, _ in ld.epoch(0)]
+    e1 = [np.asarray(l) for _, l, _ in ld.epoch(1)]
+    assert all((a == b).all() for a, b in zip(e0, e0b)), "epoch not deterministic"
+    assert any((a != b).any() for a, b in zip(e0, e1)), "shuffle not epoch-varying"
+    seen = np.sort(np.concatenate(e0))
+    assert (seen == np.arange(n)).all(), "not a permutation"
+
+
+def test_checkpoint_roundtrip_tmpdir(tmp_path):
+    from repro.checkpoint import store
+
+    state = {"params": {"w": jnp.arange(12.0).reshape(3, 4)},
+             "step": jnp.asarray(3)}
+    store.save(str(tmp_path), 3, state)
+    assert store.latest_step(str(tmp_path)) == 3
+    restored = store.restore(str(tmp_path), state)
+    np.testing.assert_allclose(restored["params"]["w"], state["params"]["w"])
+    assert int(restored["step"]) == 3
+
+
+def test_hydrology_and_forecasting_models_smoke():
+    from repro.models import forecasting as F
+    from repro.models import hydrology as Hy
+
+    for name, builder in F.MODELS.items():
+        init, apply = builder(32, 8)
+        params = init(jax.random.PRNGKey(0))
+        y = apply(params, jnp.ones((4, 32)))
+        assert y.shape == (4, 8), name
+        assert np.all(np.isfinite(np.asarray(y))), name
+    p = Hy.lstm_init(jax.random.PRNGKey(0))
+    out = Hy.lstm_apply(p, jnp.ones((2, 16, Hy.N_FEATURES)))
+    assert out.shape == (2, 3) and np.all(np.isfinite(np.asarray(out)))
