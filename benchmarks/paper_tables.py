@@ -287,6 +287,12 @@ def bench_multi_pipeline(full: bool = False) -> List[Tuple]:
     t0 = time.time()
     out = run_pipelines(pipes, max_workers=4)
     rc_s = time.time() - t0
+    failures = {p.name: out[p.name]["_error"] for p in pipes
+                if "_error" in out[p.name]}
+    if failures:  # fault isolation records failures; a benchmark must not
+        # publish a speedup computed from pipelines that never ran
+        raise RuntimeError(f"multi_pipeline: {len(failures)} pipeline(s) "
+                           f"failed: {failures}")
     res = {"bm_s": bm_s, "rc_s": rc_s, "saved_s": bm_s - rc_s,
            "n_pipelines": n_pipelines}
     _dump("multi_pipeline", res)

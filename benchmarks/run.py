@@ -11,16 +11,19 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--which", default="all",
-                    help="comma list: forecasting,hydrology,scaling,multi_pipeline,roofline")
+                    help="comma list: forecasting,hydrology,scaling,"
+                         "multi_pipeline,concurrent,roofline")
     args = ap.parse_args()
     from benchmarks import paper_tables as P
     from benchmarks import roofline as R
+    from benchmarks.concurrent_pipelines import bench_concurrent_pipelines
 
     benches = {
         "hydrology": P.bench_hydrology,          # paper Tables 1-2
         "forecasting": P.bench_forecasting,      # paper Table 3
         "scaling": P.bench_scaling_ops,          # paper Fig 4
         "multi_pipeline": P.bench_multi_pipeline,  # paper Table 4
+        "concurrent": bench_concurrent_pipelines,  # Table 4, async scheduler
         "roofline": R.bench_roofline,            # beyond-paper: §Roofline
     }
     which = list(benches) if args.which == "all" else args.which.split(",")

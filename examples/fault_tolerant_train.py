@@ -43,8 +43,13 @@ if __name__ == "__main__":
     pm = PilotManager()
     pilot = pm.submit_pilot(PilotDescription())
     agent = RemoteAgent(pilot, max_workers=2)
-    task, = agent.submit([TaskDescription(name="ft-train", fn=train_task,
-                                          num_devices=pilot.size, max_retries=2)])
+    # non-blocking submission: the call returns before the task runs; the
+    # dispatcher launches it in the background and `wait` joins the result
+    task, = agent.submit_async([TaskDescription(
+        name="ft-train", fn=train_task, num_devices=pilot.size, max_retries=2)])
+    assert not task.finalized, "submit_async must return before completion"
+    print("submitted (non-blocking), state:", task.state.value)
+    agent.wait([task])
     print("state:", task.state.value, "result:", task.result,
           "attempts:", task.attempts)
     print("alive devices after failure:", len(pilot.alive_devices()), "/", pilot.size)

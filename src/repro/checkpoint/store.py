@@ -19,9 +19,31 @@ from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # container image without python-zstandard
+    zstandard = None
+import zlib
 
 PyTree = Any
+
+
+def _compress(data: bytes) -> tuple:
+    if zstandard is not None:
+        return "zstd", zstandard.ZstdCompressor(level=3).compress(data)
+    return "zlib", zlib.compress(data, 3)
+
+
+def _decompress(codec: str, buf: bytes) -> bytes:
+    if codec == "zstd":
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint was written with zstd but zstandard is not installed")
+        return zstandard.ZstdDecompressor().decompress(buf)
+    if codec == "zlib":
+        return zlib.decompress(buf)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 _SEP = "__"
 
@@ -49,15 +71,17 @@ def save(directory: str, step: int, state: PyTree) -> str:
     os.makedirs(tmp, exist_ok=True)
     flat = _flatten(state)
     manifest = {"step": step, "leaves": {}}
-    cctx = zstandard.ZstdCompressor(level=3)
     for key, leaf in flat.items():
         arr = np.asarray(jax.device_get(leaf))
-        fn = re.sub(r"[^\w.\-]", "_", key) + ".npy.zst"
+        codec, payload = _compress(arr.tobytes(order="C"))
+        fn = re.sub(r"[^\w.\-]", "_", key) + (
+            ".npy.zst" if codec == "zstd" else ".npy.zz")
         manifest["leaves"][key] = {
             "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "codec": codec,
         }
         with open(os.path.join(tmp, fn), "wb") as f:
-            f.write(cctx.compress(arr.tobytes(order="C")))
+            f.write(payload)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(path):
@@ -91,7 +115,6 @@ def restore(directory: str, like: PyTree, *, step: Optional[int] = None,
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
-    dctx = zstandard.ZstdDecompressor()
     flat_like = _flatten(like)
     flat_shard = _flatten(shardings) if shardings is not None else {}
     out: Dict[str, Any] = {}
@@ -99,7 +122,7 @@ def restore(directory: str, like: PyTree, *, step: Optional[int] = None,
         if key not in flat_like:
             continue
         with open(os.path.join(path, meta["file"]), "rb") as f:
-            buf = dctx.decompress(f.read())
+            buf = _decompress(meta.get("codec", "zstd"), f.read())
         arr = np.frombuffer(buf, dtype=np.dtype(meta["dtype"])).reshape(meta["shape"]).copy()
         if key in flat_shard and flat_shard[key] is not None:
             out[key] = jax.device_put(arr, flat_shard[key])

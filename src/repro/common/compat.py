@@ -1,0 +1,54 @@
+"""Version compatibility shims for the jax API surface this repo spans.
+
+The container pins jax 0.4.x; newer call sites are gated here so the same
+source runs on both the pinned toolchain and current releases.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def axis_size(name: str) -> int:
+    """Static size of a mapped axis inside shard_map/pmap tracing.
+
+    ``jax.lax.axis_size`` only exists on newer jax; on 0.4.x the
+    long-standing idiom ``psum(1, axis)`` constant-folds to the axis size
+    (no collective is emitted for a non-tracer operand).
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+@jax.custom_jvp
+def optimization_barrier(x):
+    """Differentiable ``lax.optimization_barrier``.
+
+    jax 0.4.x ships the primitive without an AD rule, so taking gradients
+    through a barriered residual raises NotImplementedError.  The barrier
+    only needs to pin the primal (saved-residual) values; tangents pass
+    through untouched, which also makes the JVP trivially transposable for
+    reverse mode.
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+@optimization_barrier.defjvp
+def _optimization_barrier_jvp(primals, tangents):
+    (x,), (t,) = primals, tangents
+    return jax.lax.optimization_barrier(x), t
+
+
+def current_mesh():
+    """The mesh of the enclosing jit/mesh context, or None.
+
+    ``jax.sharding.get_abstract_mesh`` is jax >= 0.5; on 0.4.x the active
+    physical mesh lives on the thread-resources env.
+    """
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    try:
+        from jax._src.mesh import thread_resources
+        return thread_resources.env.physical_mesh
+    except Exception:  # noqa: BLE001 — private-API fallback only
+        return None

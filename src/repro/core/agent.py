@@ -1,7 +1,14 @@
 """RemoteAgent: master–worker task executor (paper Fig. 3).
 
 The master holds the queue; workers execute tasks on carved communicators.
-Implements the runnability features the brief requires at scale:
+Execution is **event-driven**: ``submit_async`` enqueues tasks and returns
+immediately, and a background dispatcher thread launches tasks as devices
+free up.  The dispatcher sleeps on a condition variable and is woken by
+submissions, task completions, and pilot capacity changes — there is no
+polling spin; a bounded wait is used only while straggler speculation is
+actually possible.
+
+Runnability features the brief requires at scale:
 
 * **fault isolation + retry** — a task exception (including simulated
   ``DeviceFailure``) is contained in its Task; failed devices are removed
@@ -9,151 +16,330 @@ Implements the runnability features the brief requires at scale:
   smaller) mesh — elastic degradation;
 * **straggler mitigation** — speculative duplicate execution when a task
   runs past ``straggler_factor x`` the median duration of its tag class;
-  first completion wins;
+  first completion wins, and the speculative lease is released under its
+  own uid so the pool always recovers;
 * **overhead accounting** — per-task communicator-build / queue / execute
   timings (reproduces the paper's Table 2 overhead decomposition).
+
+Historical bug notes (regression-tested in tests/test_scheduler.py):
+``Future.result(timeout=...)`` raises ``concurrent.futures.TimeoutError``,
+which on Python 3.10 is NOT a subclass of builtin ``TimeoutError`` — the
+old polling loop caught the builtin, so still-running tasks fell into the
+generic handler and were popped as done.  The dispatcher design removes
+result-polling entirely; the one remaining timed future wait (``close``)
+catches ``concurrent.futures.TimeoutError`` explicitly.
 """
 from __future__ import annotations
 
+import concurrent.futures
 import itertools
-import queue
 import statistics
 import threading
 import time
 import traceback
-from concurrent.futures import ThreadPoolExecutor, Future
-from typing import Dict, List, Optional
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.pilot import Pilot
 from repro.core.task import DeviceFailure, Task, TaskDescription, TaskState
+
+# Python 3.10: concurrent.futures.TimeoutError is distinct from the builtin;
+# 3.11+ aliases them.  Catch both wherever a timed future wait happens.
+_FUTURE_TIMEOUT_ERRORS = (TimeoutError, concurrent.futures.TimeoutError)
 
 
 class RemoteAgent:
     _uid = itertools.count()
 
     def __init__(self, pilot: Pilot, *, max_workers: int = 4,
-                 straggler_factor: float = 3.0, straggler_min_s: float = 1.0):
+                 straggler_factor: float = 3.0, straggler_min_s: float = 1.0,
+                 straggler_check_s: float = 0.1):
         self.pilot = pilot
         self.max_workers = max_workers
         self.straggler_factor = straggler_factor
         self.straggler_min_s = straggler_min_s
+        self.straggler_check_s = straggler_check_s
         self._durations: Dict[str, List[float]] = {}
         self._pool = ThreadPoolExecutor(max_workers=max_workers,
                                         thread_name_prefix="rc-worker")
-        self._lock = threading.Lock()
+        # _result_lock guards task result/state transitions (primary vs
+        # speculative twin); _cond guards the scheduling state below.
+        self._result_lock = threading.Lock()
+        self._cond = threading.Condition()
+        self._pending: List[Task] = []            # priority-ordered queue
+        self._running: Dict[str, Task] = {}       # primary uid -> task
+        self._spec: Dict[str, Tuple[str, Future]] = {}  # uid -> (lease uid, fut)
+        self._seq = itertools.count()             # FIFO tiebreak within priority
+        self._order: Dict[str, int] = {}
+        self._closed = False
+        pilot.add_capacity_listener(self._wake)
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, name="rc-dispatcher", daemon=True)
+        self._dispatcher.start()
 
     # -- public --------------------------------------------------------------
 
-    def execute(self, tasks: List[Task]) -> List[Task]:
-        """Run a batch of tasks to completion (respecting device capacity,
-        priority order)."""
-        pending = sorted(tasks, key=lambda t: -t.description.priority)
-        futures: Dict[str, Future] = {}
-        speculative: Dict[str, Future] = {}
-        while pending or futures:
-            # launch whatever fits the free pool
-            still = []
-            launched = False
-            for t in pending:
-                if self._try_launch(t, futures):
-                    launched = True
-                    continue
-                still.append(t)
-            pending = still
-            if pending and not futures and not launched:
-                # nothing runnable and nothing running: pool is dead
-                for t in pending:
-                    t.state = TaskState.FAILED
-                    t.error = "pilot has no alive devices"
-                break
-            done_uids = []
-            for uid, fut in list(futures.items()):
-                t = next(x for x in tasks if x.uid == uid)
-                try:
-                    fut.result(timeout=0.05)
-                    done_uids.append(uid)
-                except TimeoutError:
-                    self._maybe_speculate(t, futures, speculative)
-                except Exception:  # pragma: no cover - result recorded in task
-                    done_uids.append(uid)
-            for uid in done_uids:
-                futures.pop(uid, None)
-                spec = speculative.pop(uid, None)
-                if spec is not None:
-                    spec.cancel()
-            # retries
+    def submit_async(self, descriptions: List[TaskDescription],
+                     on_complete: Optional[Callable[[Task], None]] = None,
+                     ) -> List[Task]:
+        """Enqueue tasks and return immediately (non-blocking).
+
+        ``on_complete(task)`` fires once per task when it reaches a terminal
+        state — after all retries, never while another attempt is possible.
+        Callbacks run on worker threads; they may call ``submit_async``.
+        """
+        tasks = [Task(uid=f"task.{next(self._uid):06d}", description=d)
+                 for d in descriptions]
+        if on_complete is not None:
             for t in tasks:
-                if (
-                    t.state == TaskState.FAILED
-                    and t.attempts <= t.description.max_retries
-                    and t.uid not in futures
-                ):
-                    t.state = TaskState.PENDING
-                    pending.append(t)
+                t.add_done_callback(on_complete)
+        self._enqueue(tasks)
         return tasks
 
     def submit(self, descriptions: List[TaskDescription]) -> List[Task]:
-        tasks = [Task(uid=f"task.{next(self._uid):06d}", description=d)
-                 for d in descriptions]
-        return self.execute(tasks)
+        """Blocking submit: enqueue and wait for every task to finish."""
+        tasks = self.submit_async(descriptions)
+        self.wait(tasks)
+        return tasks
 
-    # -- internals -------------------------------------------------------------
+    def execute(self, tasks: List[Task]) -> List[Task]:
+        """Run pre-built Task objects to completion (respecting device
+        capacity, priority order)."""
+        self._enqueue([t for t in tasks if not t.finalized])
+        self.wait(tasks)
+        return tasks
 
-    def _try_launch(self, task: Task, futures: Dict[str, Future]) -> bool:
-        d = task.description
-        n = min(d.num_devices, max(len(self.pilot.alive_devices()), 1))
-        devices = self.pilot.lease(n, task.uid)
-        if devices is None:
-            return False
-        task.state = TaskState.RUNNING
-        futures[task.uid] = self._pool.submit(self._run_one, task, devices)
+    def wait(self, tasks: List[Task], timeout: Optional[float] = None) -> bool:
+        """Block until all tasks are terminal; False on timeout."""
+        deadline = None if timeout is None else time.time() + timeout
+        for t in tasks:
+            remaining = None if deadline is None else max(0.0, deadline - time.time())
+            if not t.wait(remaining):
+                return False
         return True
 
-    def _run_one(self, task: Task, devices) -> None:
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Stop the dispatcher and drain workers (idempotent).  Queued
+        tasks that never launched are CANCELED and finalized so waiters
+        and completion callbacks are released, not left hanging."""
+        self.pilot.remove_capacity_listener(self._wake)
+        with self._cond:
+            self._closed = True
+            abandoned, self._pending = self._pending, []
+            for t in abandoned:
+                t.state = TaskState.CANCELED
+                t.error = "agent closed before task launched"
+                t.finalized = True
+            specs = list(self._spec.values())  # snapshot under the cond:
+            # workers pop from _spec concurrently
+            self._cond.notify_all()
+        for t in abandoned:
+            self._finalize(t)
+        for _, fut in specs:
+            fut.cancel()
+            try:
+                fut.result(timeout=timeout if timeout is not None else 0)
+            except _FUTURE_TIMEOUT_ERRORS:
+                pass  # still running: the pool shutdown below will not wait
+            except Exception:  # noqa: BLE001 — result already in the task
+                pass
+        self._pool.shutdown(wait=timeout is None or timeout > 0)
+
+    def __enter__(self) -> "RemoteAgent":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- scheduling core -------------------------------------------------------
+
+    def _enqueue(self, tasks: List[Task]) -> None:
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("RemoteAgent is closed")
+            for t in tasks:
+                self._order.setdefault(t.uid, next(self._seq))
+            self._pending.extend(tasks)
+            self._pending.sort(
+                key=lambda t: (-t.description.priority, self._order[t.uid]))
+            self._cond.notify_all()
+
+    def _wake(self) -> None:
+        with self._cond:
+            self._cond.notify_all()
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            with self._cond:
+                self._launch_ready_locked()
+                self._fail_if_pool_dead_locked()
+                if self._closed and not self._running and not self._spec:
+                    return
+                # Sleep until woken by submit/complete/release.  A bounded
+                # wait is used only while speculation could trigger.
+                self._cond.wait(self._wait_timeout_locked())
+
+    def _wait_timeout_locked(self) -> Optional[float]:
+        for task in self._running.values():
+            d = task.description
+            if (d.speculative and task.uid not in self._spec
+                    and len(self._durations.get(d.kind, [])) >= 3):
+                return self.straggler_check_s
+        return None
+
+    def _launch_ready_locked(self) -> None:
+        if self._closed:
+            return
+        still: List[Task] = []
+        for t in self._pending:
+            if len(self._running) + len(self._spec) >= self.max_workers:
+                still.append(t)
+                continue
+            d = t.description
+            n = min(d.num_devices, max(len(self.pilot.alive_devices()), 1))
+            devices = self.pilot.lease(n, t.uid)
+            if devices is None:
+                still.append(t)
+                continue
+            t.state = TaskState.RUNNING
+            self._running[t.uid] = t
+            self._pool.submit(self._run_one, t, devices, t.uid)
+        self._pending = still
+        self._check_stragglers_locked()
+
+    def _fail_if_pool_dead_locked(self) -> None:
+        if (self._pending and not self._running and not self._spec
+                and not self.pilot.alive_devices()):
+            dead, self._pending = self._pending, []
+            for t in dead:
+                t.state = TaskState.FAILED
+                t.error = "pilot has no alive devices"
+                t.finalized = True
+            # fire callbacks outside the condition
+            threading.Thread(target=lambda: [self._finalize(t) for t in dead],
+                             daemon=True).start()
+
+    def _check_stragglers_locked(self) -> None:
+        now = time.time()
+        for uid, task in list(self._running.items()):
+            d = task.description
+            # the lease release wakes the dispatcher before _on_worker_exit
+            # removes the uid from _running — skip tasks already terminal
+            if task.state != TaskState.RUNNING:
+                continue
+            if not d.speculative or uid in self._spec:
+                continue
+            hist = self._durations.get(d.kind, [])
+            if len(hist) < 3 or task.started_at is None:
+                continue
+            if now - task.started_at <= max(
+                    self.straggler_factor * statistics.median(hist),
+                    self.straggler_min_s):
+                continue
+            if len(self._running) + len(self._spec) >= self.max_workers:
+                continue
+            lease_uid = f"{uid}.spec{task.attempts}"
+            devices = self.pilot.lease(min(d.num_devices, 1), lease_uid)
+            if devices is None:
+                continue
+            self._spec[uid] = (
+                lease_uid, self._pool.submit(self._run_one, task, devices,
+                                             lease_uid))
+
+    # -- worker side -----------------------------------------------------------
+
+    def _run_one(self, task: Task, devices, lease_uid: str) -> None:
         d = task.description
-        task.attempts += 1
-        task.overhead_s["queue"] = time.time() - task.submitted_at
+        is_primary = lease_uid == task.uid
+        if is_primary:
+            # a speculative twin must not consume retry budget nor clobber
+            # the primary's timing fields (a shrunken duration would drag
+            # the straggler median down and cascade spurious speculation)
+            task.attempts += 1
+            task.overhead_s["queue"] = time.time() - task.submitted_at
         try:
             t0 = time.time()
-            mesh_shape = d.mesh_shape if d.mesh_shape and len(devices) == _prod(d.mesh_shape) else (len(devices),)
-            mesh_axes = d.mesh_axes if len(mesh_shape) == len(d.mesh_axes) else ("data",)
+            mesh_shape = (d.mesh_shape
+                          if d.mesh_shape and len(devices) == _prod(d.mesh_shape)
+                          else (len(devices),))
+            mesh_axes = (d.mesh_axes if len(mesh_shape) == len(d.mesh_axes)
+                         else ("data",))
             comm = self.pilot.carve(devices, mesh_shape, mesh_axes)
-            task.overhead_s["communicator"] = time.time() - t0
-            task.started_at = time.time()
+            if is_primary:
+                task.overhead_s["communicator"] = time.time() - t0
+                task.started_at = time.time()
             result = d.fn(comm, *d.args)
-            task.finished_at = time.time()
-            with self._lock:
+            finished = time.time()
+            with self._result_lock:
                 if task.state == TaskState.DONE:
                     return  # a speculative twin won
+                task.finished_at = finished
                 task.result = result
+                task.error = None  # a retry succeeded: stale error must not
+                # make error-checking callers reject a DONE task
                 task.state = TaskState.DONE
                 self._durations.setdefault(d.kind, []).append(task.duration_s)
         except DeviceFailure as e:
-            task.finished_at = time.time()
             self.pilot.mark_failed(e.device_ids)
-            task.error = f"DeviceFailure{e.device_ids}"
-            task.state = TaskState.FAILED
+            with self._result_lock:
+                if task.state == TaskState.DONE:
+                    return
+                task.finished_at = time.time()
+                task.error = f"DeviceFailure{e.device_ids}"
+                task.state = TaskState.FAILED
         except Exception as e:  # noqa: BLE001 — isolation boundary
-            task.finished_at = time.time()
-            task.error = f"{type(e).__name__}: {e}\n{traceback.format_exc()[-1500:]}"
-            task.state = TaskState.FAILED
+            with self._result_lock:
+                if task.state == TaskState.DONE:
+                    return
+                task.finished_at = time.time()
+                task.error = f"{type(e).__name__}: {e}\n{traceback.format_exc()[-1500:]}"
+                task.state = TaskState.FAILED
         finally:
-            self.pilot.release(task.uid)
+            self.pilot.release(lease_uid)  # NB: the lease uid, not task.uid —
+            # a speculative twin's lease differs and must be returned too
+            self._on_worker_exit(task, lease_uid)
 
-    def _maybe_speculate(self, task: Task, futures, speculative) -> None:
-        d = task.description
-        if not d.speculative or task.uid in speculative:
-            return
-        hist = self._durations.get(d.kind, [])
-        if len(hist) < 3 or task.started_at is None:
-            return
-        median = statistics.median(hist)
-        runtime = time.time() - task.started_at
-        if runtime > max(self.straggler_factor * median, self.straggler_min_s):
-            devices = self.pilot.lease(min(d.num_devices, 1), task.uid + ".spec")
-            if devices is None:
-                return
-            speculative[task.uid] = self._pool.submit(self._run_one, task, devices)
+    def _on_worker_exit(self, task: Task, lease_uid: str) -> None:
+        """One attempt (primary or speculative) finished running.  Decide —
+        under the scheduling condition — whether the task is terminal,
+        should retry, or must wait for an in-flight twin."""
+        to_finalize = False
+        with self._cond:
+            if lease_uid == task.uid:
+                self._running.pop(task.uid, None)
+            else:
+                spec = self._spec.get(task.uid)
+                if spec is not None and spec[0] == lease_uid:
+                    self._spec.pop(task.uid, None)
+            in_flight = task.uid in self._running or task.uid in self._spec
+            if not task.finalized:
+                if task.state == TaskState.DONE:
+                    # first completion wins, even with a twin still running
+                    task.finalized = True
+                    to_finalize = True
+                elif task.state == TaskState.FAILED and not in_flight:
+                    if (not self._closed
+                            and task.attempts <= task.description.max_retries
+                            and self.pilot.alive_devices()):
+                        task.state = TaskState.PENDING
+                        self._pending.append(task)
+                        self._pending.sort(key=lambda t: (
+                            -t.description.priority, self._order[t.uid]))
+                    else:
+                        task.finalized = True
+                        to_finalize = True
+            self._cond.notify_all()
+        if to_finalize:
+            self._finalize(task)
+
+    def _finalize(self, task: Task) -> None:
+        """Fire completion callbacks and release waiters (outside the
+        scheduling condition)."""
+        for cb in task._drain_callbacks():
+            try:
+                cb(task)
+            except Exception:  # noqa: BLE001 — callbacks must not kill workers
+                traceback.print_exc()
 
 
 def _prod(xs):

@@ -31,7 +31,26 @@ class Pilot:
         self._failed: set = set()
         self._leased: dict = {}  # device index -> task uid
         self._lock = threading.Lock()
+        self._listeners: list = []  # called (no args) when capacity frees/changes
         self.created_at = time.time()
+
+    # -- capacity-change notification ----------------------------------------
+
+    def add_capacity_listener(self, cb) -> None:
+        """Register ``cb()`` to run whenever devices are released or marked
+        failed.  Listeners are invoked OUTSIDE the pilot lock so they may
+        take their own locks (e.g. an agent's scheduling condition)."""
+        with self._lock:
+            self._listeners.append(cb)
+
+    def remove_capacity_listener(self, cb) -> None:
+        with self._lock:
+            if cb in self._listeners:
+                self._listeners.remove(cb)
+
+    def _notify(self) -> None:
+        for cb in list(self._listeners):
+            cb()
 
     # -- capacity ------------------------------------------------------------
 
@@ -58,6 +77,7 @@ class Pilot:
                     if dev.id == d:
                         self._failed.add(i)
                         self._leased.pop(i, None)
+        self._notify()
 
     # -- leasing -------------------------------------------------------------
 
@@ -75,10 +95,16 @@ class Pilot:
                 self._leased[i] = task_uid
             return [self._devices[i] for i in take]
 
-    def release(self, task_uid: str) -> None:
+    def release(self, task_uid: str) -> int:
+        """Return the lease held under ``task_uid``; returns #devices freed."""
+        freed = 0
         with self._lock:
             for i in [i for i, u in self._leased.items() if u == task_uid]:
                 del self._leased[i]
+                freed += 1
+        if freed:
+            self._notify()
+        return freed
 
     def carve(self, devices: Sequence, mesh_shape=None,
               mesh_axes: Tuple[str, ...] = ("data",)) -> Communicator:

@@ -10,8 +10,9 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import threading
 import time
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 
 class TaskState(enum.Enum):
@@ -55,6 +56,18 @@ class Task:
     finished_at: Optional[float] = None
     # overhead decomposition (the paper's Table 2 metric)
     overhead_s: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # -- async completion machinery (set by the agent) ----------------------
+    # ``finalized`` flips exactly once, when the agent decides no further
+    # attempts will run (success, exhausted retries, or cancellation); only
+    # then do callbacks fire and ``wait`` return.  A FAILED state alone is
+    # not terminal — the task may still be retried.
+    finalized: bool = dataclasses.field(default=False, repr=False, compare=False)
+    _finished: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False, compare=False)
+    _callbacks: List[Callable[["Task"], None]] = dataclasses.field(
+        default_factory=list, repr=False, compare=False)
+    _cb_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
 
     @property
     def duration_s(self) -> Optional[float]:
@@ -64,6 +77,28 @@ class Task:
 
     def done(self) -> bool:
         return self.state in (TaskState.DONE, TaskState.FAILED, TaskState.CANCELED)
+
+    def add_done_callback(self, cb: Callable[["Task"], None]) -> None:
+        """Register ``cb(task)`` to run when the task reaches a terminal
+        state (after all retries).  Fires immediately if already terminal.
+        The lock closes the check-then-append race against the agent
+        draining callbacks at finalization."""
+        with self._cb_lock:
+            if not self._finished.is_set():
+                self._callbacks.append(cb)
+                return
+        cb(self)
+
+    def _drain_callbacks(self) -> List[Callable[["Task"], None]]:
+        """Agent-side: atomically mark finished and take the callbacks."""
+        with self._cb_lock:
+            self._finished.set()
+            callbacks, self._callbacks = self._callbacks, []
+        return callbacks
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until the task is terminal; True if it finished in time."""
+        return self._finished.wait(timeout)
 
 
 class DeviceFailure(RuntimeError):

@@ -20,6 +20,8 @@ from jax.experimental.shard_map import shard_map
 from repro.dataframe import ops_local as L
 from repro.dataframe.table import Table
 
+from repro.common.compat import axis_size
+
 
 def _specs_for(table: Table):
     return {k: P(table.axis) if v.ndim == 1 else P(table.axis, *([None] * (v.ndim - 1)))
@@ -29,7 +31,7 @@ def _specs_for(table: Table):
 def _bucket_exchange(cols: Dict, valid, dest: jnp.ndarray, axis: str, cap: int):
     """Per-shard: route rows to destination shards with per-dest capacity
     ``cap``; returns received (cols, valid, n_dropped)."""
-    PIDX = jax.lax.axis_size(axis)
+    PIDX = axis_size(axis)
     # position of each row within its destination bucket
     onehot = jax.nn.one_hot(jnp.where(valid, dest, PIDX), PIDX + 1, dtype=jnp.int32)
     pos = jnp.sum((jnp.cumsum(onehot, axis=0) - onehot) * onehot, axis=-1)
@@ -80,7 +82,7 @@ def shuffle(table: Table, key: str, *, capacity_factor: float = 2.0):
         out_specs=(_specs_for(table), P(axis), P()),
     )
     def _shuf(cols, valid):
-        dest = (L.hash_u32(cols[key]) % jnp.uint32(jax.lax.axis_size(axis))).astype(jnp.int32)
+        dest = (L.hash_u32(cols[key]) % jnp.uint32(axis_size(axis))).astype(jnp.int32)
         recv, rvalid, dropped = _bucket_exchange(cols, valid, dest, axis, cap)
         return recv, rvalid, dropped[None]
 
@@ -104,7 +106,7 @@ def sort(table: Table, key: str, *, capacity_factor: float = 2.5,
         out_specs=(_specs_for(table), P(axis), P()),
     )
     def _sort(cols, valid):
-        nsh = jax.lax.axis_size(axis)
+        nsh = axis_size(axis)
         cols, valid = L.sort_by_key(cols, valid, key)
         keys = cols[key]
         big = jnp.iinfo(keys.dtype).max
@@ -150,7 +152,7 @@ def join(left: Table, right: Table, key: str, *, capacity_factor: float = 2.0):
         out_specs=(out_spec, P(axis), P()),
     )
     def _join(lc, lv, rc, rv):
-        nsh = jax.lax.axis_size(axis)
+        nsh = axis_size(axis)
         ldest = (L.hash_u32(lc[key]) % jnp.uint32(nsh)).astype(jnp.int32)
         rdest = (L.hash_u32(rc[key]) % jnp.uint32(nsh)).astype(jnp.int32)
         lrecv, lrv, ldrop = _bucket_exchange(lc, lv, ldest, axis, capL)

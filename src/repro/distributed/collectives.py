@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.common.compat import axis_size
+
 
 def _quantize_int8(x: jnp.ndarray, block: int = 256):
     """x: [N] -> (q int8 [N], scales f32 [N/block])."""
@@ -77,7 +79,7 @@ def compressed_grad_sync(
         carry_in = g if ef is None else g + ef.astype(g.dtype)
 
         def sync(v):
-            return int8_psum(v, axis, block=block) / jax.lax.axis_size(axis)
+            return int8_psum(v, axis, block=block) / axis_size(axis)
 
         fn = shard_map(
             sync, mesh=mesh,

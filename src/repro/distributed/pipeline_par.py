@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.common.compat import axis_size
+
 
 def pipeline_forward(
     stage_fn: Callable,      # stage_fn(stage_params, x) -> y  (one stage)
@@ -30,7 +32,7 @@ def pipeline_forward(
     n_micro = x_micro.shape[0]
 
     def per_stage(params_stage, queue):
-        S = jax.lax.axis_size(axis)
+        S = axis_size(axis)
         stage = jax.lax.axis_index(axis)
         ticks = n_micro + S - 1
         feat_shape = queue.shape[1:]

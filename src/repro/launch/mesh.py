@@ -5,6 +5,14 @@ from __future__ import annotations
 import jax
 
 
+def _mesh(dev_array, axes):
+    if hasattr(jax.sharding, "AxisType"):  # jax >= 0.5 explicit-axes API
+        return jax.sharding.Mesh(
+            dev_array, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.sharding.Mesh(dev_array, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: (16, 16) = (data, model) = 256 chips.
     Multi-pod: (2, 16, 16) = (pod, data, model) = 512 chips.
@@ -28,10 +36,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     import numpy as np
 
     dev_array = np.asarray(devices).reshape(shape)
-    return jax.sharding.Mesh(
-        dev_array, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return _mesh(dev_array, axes)
 
 
 def make_mesh(shape, axes):
@@ -41,6 +46,4 @@ def make_mesh(shape, axes):
     n = int(np.prod(shape))
     devices = jax.devices()[:n]
     dev_array = np.asarray(devices).reshape(shape)
-    return jax.sharding.Mesh(
-        dev_array, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _mesh(dev_array, axes)
