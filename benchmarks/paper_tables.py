@@ -301,6 +301,19 @@ def bench_multi_pipeline(full: bool = False) -> List[Tuple]:
 
 
 def _dump(name: str, obj) -> None:
+    """Merge ``obj`` into results/bench/<name>.json — several benchmarks
+    record different sections of the same file (e.g. multi_pipeline.json
+    also carries the concurrent_pipelines multi-pilot scenario), so a
+    whole-file overwrite would clobber sibling results."""
     os.makedirs(os.path.join(REPO, "results", "bench"), exist_ok=True)
-    with open(os.path.join(REPO, "results", "bench", f"{name}.json"), "w") as f:
-        json.dump(obj, f, indent=1, default=float)
+    path = os.path.join(REPO, "results", "bench", f"{name}.json")
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            data = {}
+    data.update(obj)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, default=float)

@@ -21,13 +21,16 @@ CKPT = "/tmp/deep_rc_ft_demo"
 STATE = {"w": jnp.zeros((4,)), "step": jnp.asarray(0)}
 
 
-def train_task(comm):
+def train_task(comm, resume_step=None):
+    # checkpoint-aware retry: the agent reads the last completed step from
+    # the checkpoint dir and hands it in on every retried attempt — the
+    # task no longer rediscovers it with store.latest_step itself
     state = STATE
     start = 0
-    if store.latest_step(CKPT) is not None:
-        state = store.restore(CKPT, STATE)
+    if resume_step is not None:
+        state = store.restore(CKPT, STATE, step=resume_step)
         start = int(state["step"])
-        print(f"  resumed from checkpoint at step {start}")
+        print(f"  agent handed resume_step={resume_step}; resuming at {start}")
     for i in range(start, 10):
         state = {"w": state["w"] + 1.0, "step": state["step"] + 1}
         store.save(CKPT, i + 1, state)
@@ -46,7 +49,8 @@ if __name__ == "__main__":
     # non-blocking submission: the call returns before the task runs; the
     # dispatcher launches it in the background and `wait` joins the result
     task, = agent.submit_async([TaskDescription(
-        name="ft-train", fn=train_task, num_devices=pilot.size, max_retries=2)])
+        name="ft-train", fn=train_task, num_devices=pilot.size, max_retries=2,
+        checkpoint_dir=CKPT)])
     assert not task.finalized, "submit_async must return before completion"
     print("submitted (non-blocking), state:", task.state.value)
     agent.wait([task])

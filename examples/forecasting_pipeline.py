@@ -1,8 +1,14 @@
 """Paper Table-3 pipeline: NeuralForecast-analogue models trained and
-evaluated through Deep RC — as N *concurrent* pipelines batched under one
-pilot (the Table-4 mode), not a serial loop.
+evaluated through Deep RC — as N *concurrent* pipelines batched under the
+pilot layer (the Table-4 mode), not a serial loop.
 
-  PYTHONPATH=src python examples/forecasting_pipeline.py [--models NLinear,GRU] [--steps 60]
+Single-pilot by default; ``--pilots 2`` splits the emulated device pool
+into disjoint per-pod pilots and places one model pipeline per pod via
+the PilotManager scheduler; ``--quota N`` caps each pipeline's concurrent
+device share (fairness under contention).
+
+  PYTHONPATH=src python examples/forecasting_pipeline.py \
+      [--models NLinear,GRU] [--steps 60] [--pilots 2] [--quota 1]
 """
 import argparse, os, sys
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
@@ -11,13 +17,17 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks import paper_tables as P
 from repro.core.bridge import dl_stage
-from repro.core.pipeline import Pipeline, run_pipelines
+from repro.core.pipeline import Pipeline, run_pipelines, run_pipelines_multi
 from repro.models import forecasting as F
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--models", default=",".join(list(F.MODELS)[:3]))
     ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--pilots", type=int, default=1,
+                    help="number of disjoint pilots to spread pipelines over")
+    ap.add_argument("--quota", type=int, default=None,
+                    help="per-pipeline concurrent-device cap")
     args = ap.parse_args()
     names = args.models.split(",")
 
@@ -25,10 +35,13 @@ if __name__ == "__main__":
         Pipeline(name, [
             dl_stage("train", lambda c, u, nm=name: P._train_forecaster(
                 nm, args.steps), kind="train"),
-        ])
+        ], quota=args.quota)
         for name in names
     ]
-    out = run_pipelines(pipes, max_workers=4)
+    if args.pilots > 1:
+        out = run_pipelines_multi(pipes, num_pilots=args.pilots)
+    else:
+        out = run_pipelines(pipes, max_workers=4)
     failed = False
     for name in names:
         if "_error" in out[name]:  # fault isolation: siblings still report
@@ -43,6 +56,10 @@ if __name__ == "__main__":
     print(f"batch wall={meta['wall_s']:.1f}s "
           f"task_busy={meta['task_busy_s']:.1f}s "
           f"overlap_factor={meta['overlap_factor']:.2f}")
+    if args.pilots > 1:
+        print("placement:", meta["placement"])
+        if meta["quota_violations"]:
+            sys.exit(f"quota violations: {meta['quota_violations']}")
     if failed:
         sys.exit("forecasting pipeline had failures (see above)")
     print("forecasting pipeline OK")

@@ -19,15 +19,25 @@ if __name__ == "__main__":
 
     # Table-2 decomposition through the async scheduler: a minimal
     # preprocess -> train DAG whose per-task overheads are recorded by the
-    # agent and aggregated into run_pipelines' _meta.
+    # agent and aggregated into run_pipelines' _meta.  The pipeline runs
+    # through the full PilotManager -> Pilot -> Transport stack; each
+    # stage's communicator records which pilot pool it was carved from.
+    pilots_seen = set()
+
+    def note_pilot(c, v):
+        pilots_seen.add(getattr(c, "pilot_uid", None))
+        return v
+
     pipe = Pipeline("hydro", [
-        cylon_stage("preprocess", lambda c, u: 1.0),
-        dl_stage("train", lambda c, u: u["preprocess"] * 2, deps=("preprocess",)),
-    ])
+        cylon_stage("preprocess", lambda c, u: note_pilot(c, 1.0)),
+        dl_stage("train", lambda c, u: note_pilot(c, u["preprocess"] * 2),
+                 deps=("preprocess",)),
+    ], quota=1)  # cap: hydro never holds more than 1 device at once
     out = run_pipelines([pipe])
     for stage, task in pipe.tasks.items():
         print(f"overhead/{stage:12s} queue={task.overhead_s['queue']*1e3:.2f}ms "
               f"communicator={task.overhead_s['communicator']*1e3:.2f}ms "
               f"execute={task.duration_s*1e3:.2f}ms")
-    print(f"pipeline wall={out['_meta']['wall_s']*1e3:.1f}ms")
+    print(f"pipeline wall={out['_meta']['wall_s']*1e3:.1f}ms "
+          f"pilot={out['_meta']['pilot']} carved_from={sorted(pilots_seen)}")
     print("hydrology pipeline OK")

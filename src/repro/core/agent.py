@@ -8,6 +8,13 @@ submissions, task completions, and pilot capacity changes — there is no
 polling spin; a bounded wait is used only while straggler speculation is
 actually possible.
 
+Execution is layered ``PilotManager -> Pilot -> Transport``: the agent
+owns *when* an attempt runs (this dispatcher), and a pluggable
+:class:`repro.core.transport.Transport` owns *where* it runs — the
+default ``InProcessTransport`` is a thread pool in this process, and the
+interface admits a subprocess / jax-distributed transport later without
+touching the scheduling logic here.
+
 Runnability features the brief requires at scale:
 
 * **fault isolation + retry** — a task exception (including simulated
@@ -19,7 +26,16 @@ Runnability features the brief requires at scale:
   first completion wins, and the speculative lease is released under its
   own uid so the pool always recovers;
 * **overhead accounting** — per-task communicator-build / queue / execute
-  timings (reproduces the paper's Table 2 overhead decomposition).
+  timings (reproduces the paper's Table 2 overhead decomposition);
+* **per-group device quotas** — tasks carrying a ``group`` (their
+  pipeline's name) never hold more devices concurrently than the group's
+  quota (``set_quota``); over-quota tasks wait in the queue while other
+  groups' tasks launch past them, so one wide pipeline cannot starve its
+  siblings (Table-4 fairness).  Every grouped lease/release is recorded
+  in ``lease_trace`` and ``group_peaks()`` so fairness is auditable;
+* **checkpoint-aware retry** — a retried task whose description names a
+  ``checkpoint_dir`` is re-submitted with ``resume_step`` set to the last
+  completed step found there, instead of the task fn rediscovering it.
 
 Historical bug notes (regression-tested in tests/test_scheduler.py):
 ``Future.result(timeout=...)`` raises ``concurrent.futures.TimeoutError``,
@@ -31,17 +47,20 @@ catches ``concurrent.futures.TimeoutError`` explicitly.
 """
 from __future__ import annotations
 
+import collections
 import concurrent.futures
 import itertools
 import statistics
 import threading
 import time
 import traceback
-from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Callable, Dict, List, Optional, Tuple
+from concurrent.futures import Future
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
+from repro.checkpoint import store as ckpt_store
 from repro.core.pilot import Pilot
 from repro.core.task import DeviceFailure, Task, TaskDescription, TaskState
+from repro.core.transport import InProcessTransport, Transport
 
 # Python 3.10: concurrent.futures.TimeoutError is distinct from the builtin;
 # 3.11+ aliases them.  Catch both wherever a timed future wait happens.
@@ -52,16 +71,26 @@ class RemoteAgent:
     _uid = itertools.count()
 
     def __init__(self, pilot: Pilot, *, max_workers: int = 4,
+                 transport: Optional[Transport] = None,
                  straggler_factor: float = 3.0, straggler_min_s: float = 1.0,
-                 straggler_check_s: float = 0.1):
+                 straggler_check_s: float = 0.1,
+                 lease_trace_limit: int = 10_000):
         self.pilot = pilot
-        self.max_workers = max_workers
+        # an injected transport belongs to the caller (it may be shared
+        # across agents); only a transport we created here is shut down
+        # in close()
+        self._own_transport = transport is None
+        self._transport = transport if transport is not None else \
+            InProcessTransport(max_workers)
+        # the transport bounds in-flight attempts; an explicit transport's
+        # capacity wins over the max_workers default
+        self.max_workers = (self._transport.capacity
+                            if self._transport.capacity is not None
+                            else max_workers)
         self.straggler_factor = straggler_factor
         self.straggler_min_s = straggler_min_s
         self.straggler_check_s = straggler_check_s
         self._durations: Dict[str, List[float]] = {}
-        self._pool = ThreadPoolExecutor(max_workers=max_workers,
-                                        thread_name_prefix="rc-worker")
         # _result_lock guards task result/state transitions (primary vs
         # speculative twin); _cond guards the scheduling state below.
         self._result_lock = threading.Lock()
@@ -71,6 +100,16 @@ class RemoteAgent:
         self._spec: Dict[str, Tuple[str, Future]] = {}  # uid -> (lease uid, fut)
         self._seq = itertools.count()             # FIFO tiebreak within priority
         self._order: Dict[str, int] = {}
+        # per-group quota state: quota caps, devices currently held per
+        # group (speculative twins included), observed peaks, and an
+        # auditable (time, group, delta, held-after) trace of every
+        # grouped lease event
+        self._quotas: Dict[str, int] = {}
+        self._group_held: Dict[str, int] = {}
+        self._group_peak: Dict[str, int] = {}
+        self._lease_sizes: Dict[str, Tuple[Optional[str], int]] = {}
+        self.lease_trace: Deque[Tuple[float, str, int, int]] = \
+            collections.deque(maxlen=lease_trace_limit)
         self._closed = False
         pilot.add_capacity_listener(self._wake)
         self._dispatcher = threading.Thread(
@@ -118,6 +157,37 @@ class RemoteAgent:
                 return False
         return True
 
+    # -- quotas ----------------------------------------------------------------
+
+    def set_quota(self, group: str, max_devices: Optional[int]) -> None:
+        """Cap the devices tasks of ``group`` may hold concurrently (None
+        removes the cap).  Raising a quota wakes the dispatcher so newly
+        admissible tasks launch immediately."""
+        with self._cond:
+            if max_devices is None:
+                self._quotas.pop(group, None)
+            else:
+                if max_devices < 1:
+                    raise ValueError(f"quota for {group!r} must be >= 1")
+                self._quotas[group] = max_devices
+            self._cond.notify_all()
+
+    def quota(self, group: str) -> Optional[int]:
+        with self._cond:
+            return self._quotas.get(group)
+
+    def group_peaks(self) -> Dict[str, int]:
+        """Max devices each group was observed holding at once."""
+        with self._cond:
+            return dict(self._group_peak)
+
+    def quota_violations(self) -> Dict[str, int]:
+        """Groups whose observed peak exceeded their quota (empty = the
+        enforcement invariant held for the recorded trace)."""
+        with self._cond:
+            return {g: peak for g, peak in self._group_peak.items()
+                    if g in self._quotas and peak > self._quotas[g]}
+
     def close(self, timeout: Optional[float] = None) -> None:
         """Stop the dispatcher and drain workers (idempotent).  Queued
         tasks that never launched are CANCELED and finalized so waiters
@@ -143,7 +213,8 @@ class RemoteAgent:
                 pass  # still running: the pool shutdown below will not wait
             except Exception:  # noqa: BLE001 — result already in the task
                 pass
-        self._pool.shutdown(wait=timeout is None or timeout > 0)
+        if self._own_transport:
+            self._transport.shutdown(wait=timeout is None or timeout > 0)
 
     def __enter__(self) -> "RemoteAgent":
         return self
@@ -187,6 +258,41 @@ class RemoteAgent:
                 return self.straggler_check_s
         return None
 
+    def _quota_headroom_locked(self, group: Optional[str]) -> Optional[int]:
+        """Devices the group may still take (None = unconstrained)."""
+        if group is None or group not in self._quotas:
+            return None
+        return self._quotas[group] - self._group_held.get(group, 0)
+
+    def _record_lease_locked(self, group: Optional[str], delta: int) -> None:
+        if group is None:
+            return
+        held = self._group_held.get(group, 0) + delta
+        self._group_held[group] = held
+        if delta > 0:
+            self._group_peak[group] = max(self._group_peak.get(group, 0), held)
+        self.lease_trace.append((time.time(), group, delta, held))
+
+    def _submit_attempt_locked(self, task: Task, devices, lease_uid: str,
+                               group) -> bool:
+        """Hand one attempt to the transport; on submit failure (e.g. a
+        shared transport was shut down) undo the lease/quota bookkeeping
+        instead of letting the exception kill the dispatcher thread."""
+        try:
+            self._transport.submit(self._run_one, task, devices, lease_uid)
+            return True
+        except Exception as e:  # noqa: BLE001 — isolation boundary
+            self._lease_sizes.pop(lease_uid, None)
+            self._record_lease_locked(group, -len(devices))
+            self.pilot.release(lease_uid)
+            task.finished_at = time.time()
+            task.error = f"transport rejected attempt: {type(e).__name__}: {e}"
+            task.state = TaskState.FAILED
+            task.finalized = True
+            threading.Thread(target=self._finalize, args=(task,),
+                             daemon=True).start()
+            return False
+
     def _launch_ready_locked(self) -> None:
         if self._closed:
             return
@@ -197,13 +303,27 @@ class RemoteAgent:
                 continue
             d = t.description
             n = min(d.num_devices, max(len(self.pilot.alive_devices()), 1))
+            headroom = self._quota_headroom_locked(d.group)
+            if headroom is not None:
+                if headroom < 1:
+                    # over quota: this task waits, later (other-group)
+                    # tasks still get considered — backpressure without
+                    # head-of-line blocking
+                    still.append(t)
+                    continue
+                # a wide task shrinks to its group's remaining share, the
+                # same elastic-degradation contract as device failures
+                n = min(n, headroom)
             devices = self.pilot.lease(n, t.uid)
             if devices is None:
                 still.append(t)
                 continue
             t.state = TaskState.RUNNING
             self._running[t.uid] = t
-            self._pool.submit(self._run_one, t, devices, t.uid)
+            self._lease_sizes[t.uid] = (d.group, len(devices))
+            self._record_lease_locked(d.group, len(devices))
+            if not self._submit_attempt_locked(t, devices, t.uid, d.group):
+                self._running.pop(t.uid, None)
         self._pending = still
         self._check_stragglers_locked()
 
@@ -238,13 +358,25 @@ class RemoteAgent:
                 continue
             if len(self._running) + len(self._spec) >= self.max_workers:
                 continue
+            headroom = self._quota_headroom_locked(d.group)
+            if headroom is not None and headroom < 1:
+                continue  # a speculative twin must not bust the quota
             lease_uid = f"{uid}.spec{task.attempts}"
             devices = self.pilot.lease(min(d.num_devices, 1), lease_uid)
             if devices is None:
                 continue
-            self._spec[uid] = (
-                lease_uid, self._pool.submit(self._run_one, task, devices,
-                                             lease_uid))
+            self._lease_sizes[lease_uid] = (d.group, len(devices))
+            self._record_lease_locked(d.group, len(devices))
+            try:
+                fut = self._transport.submit(self._run_one, task, devices,
+                                             lease_uid)
+            except Exception:  # noqa: BLE001 — a dead transport must not
+                # kill the dispatcher; the primary attempt is still running
+                self._lease_sizes.pop(lease_uid, None)
+                self._record_lease_locked(d.group, -len(devices))
+                self.pilot.release(lease_uid)
+                continue
+            self._spec[uid] = (lease_uid, fut)
 
     # -- worker side -----------------------------------------------------------
 
@@ -268,7 +400,12 @@ class RemoteAgent:
             if is_primary:
                 task.overhead_s["communicator"] = time.time() - t0
                 task.started_at = time.time()
-            result = d.fn(comm, *d.args)
+            if d.checkpoint_dir is not None:
+                # checkpoint-aware contract: fn accepts resume_step=None on
+                # the first attempt; retries get the last completed step
+                result = d.fn(comm, *d.args, resume_step=d.resume_step)
+            else:
+                result = d.fn(comm, *d.args)
             finished = time.time()
             with self._result_lock:
                 if task.state == TaskState.DONE:
@@ -295,6 +432,11 @@ class RemoteAgent:
                 task.error = f"{type(e).__name__}: {e}\n{traceback.format_exc()[-1500:]}"
                 task.state = TaskState.FAILED
         finally:
+            if task.state == TaskState.FAILED and d.checkpoint_dir is not None:
+                # resolve the resume point HERE, on the worker thread —
+                # a directory scan on slow storage must never run under
+                # the scheduling condition in _on_worker_exit
+                d.resume_step = ckpt_store.latest_step(d.checkpoint_dir)
             self.pilot.release(lease_uid)  # NB: the lease uid, not task.uid —
             # a speculative twin's lease differs and must be returned too
             self._on_worker_exit(task, lease_uid)
@@ -305,6 +447,8 @@ class RemoteAgent:
         should retry, or must wait for an in-flight twin."""
         to_finalize = False
         with self._cond:
+            group, leased_n = self._lease_sizes.pop(lease_uid, (None, 0))
+            self._record_lease_locked(group, -leased_n)
             if lease_uid == task.uid:
                 self._running.pop(task.uid, None)
             else:
@@ -321,6 +465,8 @@ class RemoteAgent:
                     if (not self._closed
                             and task.attempts <= task.description.max_retries
                             and self.pilot.alive_devices()):
+                        # checkpoint-aware retry: description.resume_step
+                        # was already refreshed off-lock in _run_one
                         task.state = TaskState.PENDING
                         self._pending.append(task)
                         self._pending.sort(key=lambda t: (

@@ -39,13 +39,18 @@ def cylon_stage(
 
 def dl_stage(
     name: str,
-    train_fn: Callable,  # train_fn(comm, upstream) -> result
+    train_fn: Callable,  # train_fn(comm, upstream[, resume_step=...]) -> result
     *,
     num_devices: int = 1,
     mesh_shape: Optional[tuple] = None,
     mesh_axes: tuple = ("data",),
     deps: Sequence[str] = (),
     kind: str = "train",
+    checkpoint_dir: Optional[str] = None,
 ) -> Stage:
+    """``checkpoint_dir`` opts the stage into checkpoint-aware retry: the
+    agent passes ``resume_step`` (last completed step under that dir) to
+    ``train_fn`` on every retried attempt — see RemoteAgent docs."""
     return Stage(name=name, fn=train_fn, kind=kind, num_devices=num_devices,
-                 mesh_axes=mesh_axes, mesh_shape=mesh_shape, deps=deps)
+                 mesh_axes=mesh_axes, mesh_shape=mesh_shape, deps=deps,
+                 checkpoint_dir=checkpoint_dir)

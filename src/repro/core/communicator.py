@@ -27,6 +27,10 @@ class Communicator:
     backend: str  # "ici" on TPU; "host" on CPU placeholders
     build_time_s: float
     devices: Tuple
+    # which pilot's pool this mesh was carved from (None for meshes built
+    # outside the pilot runtime).  Task fns and the migration tests use it
+    # to observe *where* an attempt actually ran.
+    pilot_uid: Optional[str] = None
 
     @property
     def size(self) -> int:
@@ -35,11 +39,16 @@ class Communicator:
     def axis_size(self, name: str) -> int:
         return self.mesh.shape[name]
 
+    def describe(self) -> dict:
+        return {"pilot": self.pilot_uid, "backend": self.backend,
+                "size": self.size, "device_ids": [d.id for d in self.devices]}
+
 
 def build_communicator(
     devices: Sequence,
     mesh_shape: Optional[Tuple[int, ...]] = None,
     mesh_axes: Tuple[str, ...] = ("data",),
+    pilot_uid: Optional[str] = None,
 ) -> Communicator:
     t0 = time.time()
     n = len(devices)
@@ -57,4 +66,5 @@ def build_communicator(
     else:
         mesh = Mesh(arr, mesh_axes)
     backend = "ici" if devices and devices[0].platform == "tpu" else "host"
-    return Communicator(mesh, backend, time.time() - t0, tuple(devices))
+    return Communicator(mesh, backend, time.time() - t0, tuple(devices),
+                        pilot_uid=pilot_uid)

@@ -1,9 +1,20 @@
-"""PilotManager / Pilot: resource acquisition (RADICAL-Pilot analogue).
+"""PilotManager / Pilot: resource acquisition + placement (RADICAL-Pilot
+analogue).
 
 A Pilot owns a pool of accelerator devices acquired once; tasks are
 multiplexed onto slices of the pool without re-acquisition (the pilot
 model's core idea).  Device failure marks devices dead; subsequent carves
 come from survivors (elastic degradation).
+
+The PilotManager is the layer above: it owns the machine's device
+inventory and hands out **disjoint** pools — two pilots never share a
+device, and submitting a pilot the machine cannot back raises instead of
+silently aliasing (`devices[:n]` overlap was a seed bug).  It is also the
+placement scheduler for the multi-pilot mode (paper Table 4 across
+per-pod pools): ``place`` picks the pilot with the most effective free
+capacity among those that admit a task kind and still satisfy a mesh
+requirement.  Pipeline-level orchestration on top of ``place`` (start,
+migrate-on-degradation) lives in :class:`repro.core.pipeline.MultiPilotScheduler`.
 """
 from __future__ import annotations
 
@@ -11,7 +22,7 @@ import dataclasses
 import itertools
 import threading
 import time
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
 
@@ -20,13 +31,19 @@ from repro.core.communicator import Communicator, build_communicator
 
 @dataclasses.dataclass
 class PilotDescription:
-    num_devices: int = -1  # -1 = all available
+    num_devices: int = -1  # -1 = all devices still free in the manager
     name: str = "pilot"
+    # task kinds this pilot admits; () = any kind.  Placement only puts
+    # work on a pilot whose kinds cover the work's kinds (e.g. a
+    # CPU-worker pod that only takes "data_engineering" stages).
+    task_kinds: Tuple[str, ...] = ()
 
 
 class Pilot:
-    def __init__(self, uid: str, devices: Sequence):
+    def __init__(self, uid: str, devices: Sequence,
+                 task_kinds: Tuple[str, ...] = ()):
         self.uid = uid
+        self.task_kinds = tuple(task_kinds)
         self._devices = list(devices)
         self._failed: set = set()
         self._leased: dict = {}  # device index -> task uid
@@ -61,12 +78,22 @@ class Pilot:
     def alive_devices(self) -> List:
         return [d for i, d in enumerate(self._devices) if i not in self._failed]
 
+    def alive_count(self) -> int:
+        with self._lock:
+            return len(self._devices) - len(self._failed)
+
     def free_count(self) -> int:
         with self._lock:
             return sum(
                 1 for i in range(len(self._devices))
                 if i not in self._failed and i not in self._leased
             )
+
+    def admits(self, kinds: Iterable[str]) -> bool:
+        """True if this pilot accepts every task kind in ``kinds``."""
+        if not self.task_kinds:
+            return True
+        return set(kinds) <= set(self.task_kinds)
 
     # -- failure handling ----------------------------------------------------
 
@@ -108,22 +135,114 @@ class Pilot:
 
     def carve(self, devices: Sequence, mesh_shape=None,
               mesh_axes: Tuple[str, ...] = ("data",)) -> Communicator:
-        return build_communicator(devices, mesh_shape, mesh_axes)
+        return build_communicator(devices, mesh_shape, mesh_axes,
+                                  pilot_uid=self.uid)
 
 
 class PilotManager:
-    """Acquires pilots (cf. radical.pilot.PilotManager)."""
+    """Acquires disjoint pilots and places work on them.
+
+    ``devices`` defaults to ``jax.devices()`` (resolved lazily so fake
+    device pools can be injected in tests).  Every ``submit_pilot`` carves
+    its pool out of the manager's remaining free devices; when the machine
+    is exhausted the submit **raises** rather than handing out an
+    overlapping slice.  ``cancel_pilot`` returns a pilot's surviving
+    devices to the free pool (failed devices stay retired).
+    """
 
     _uid = itertools.count()
 
-    def __init__(self):
+    def __init__(self, devices: Optional[Sequence] = None,
+                 pilot_factory=Pilot):
         self.pilots: List[Pilot] = []
+        self._pilot_factory = pilot_factory
+        self._devices = list(devices) if devices is not None else None
+        self._free: Optional[List] = None  # resolved with _devices
+        self._lock = threading.Lock()
+
+    def _ensure_pool_locked(self) -> None:
+        if self._devices is None:
+            self._devices = list(jax.devices())
+        if self._free is None:
+            self._free = list(self._devices)
+
+    @property
+    def total_devices(self) -> int:
+        with self._lock:
+            self._ensure_pool_locked()
+            return len(self._devices)
+
+    def free_devices(self) -> int:
+        with self._lock:
+            self._ensure_pool_locked()
+            return len(self._free)
+
+    # -- pilot lifecycle -----------------------------------------------------
 
     def submit_pilot(self, desc: PilotDescription) -> Pilot:
-        devices = jax.devices()
-        n = desc.num_devices if desc.num_devices > 0 else len(devices)
-        if n > len(devices):
-            raise RuntimeError(f"requested {n} devices, have {len(devices)}")
-        pilot = Pilot(f"{desc.name}.{next(self._uid):04d}", devices[:n])
-        self.pilots.append(pilot)
-        return pilot
+        with self._lock:
+            self._ensure_pool_locked()
+            n = desc.num_devices if desc.num_devices > 0 else len(self._free)
+            if n <= 0 or n > len(self._free):
+                raise RuntimeError(
+                    f"pilot {desc.name!r} requested {desc.num_devices} devices "
+                    f"but only {len(self._free)}/{len(self._devices)} are free "
+                    f"({len(self.pilots)} pilots already hold the rest)")
+            take, self._free = self._free[:n], self._free[n:]
+            pilot = self._pilot_factory(
+                f"{desc.name}.{next(self._uid):04d}", take,
+                task_kinds=desc.task_kinds)
+            self.pilots.append(pilot)
+            return pilot
+
+    def submit_pilots(self, descs: Sequence[PilotDescription]) -> List[Pilot]:
+        return [self.submit_pilot(d) for d in descs]
+
+    def cancel_pilot(self, pilot: Pilot) -> int:
+        """Tear a pilot down; its alive devices rejoin the free pool.
+        Returns the number of devices recovered.  Refuses while any lease
+        is outstanding — recycling a device another agent is still
+        running on would re-create exactly the overlapping-pools bug the
+        manager exists to prevent (close the pilot's agents first)."""
+        with self._lock:
+            if pilot not in self.pilots:
+                raise ValueError(f"pilot {pilot.uid} is not managed here")
+            leased = pilot.alive_count() - pilot.free_count()
+            if leased:
+                raise RuntimeError(
+                    f"pilot {pilot.uid} still has {leased} leased device(s); "
+                    "close its agent(s) before cancel_pilot")
+            self.pilots.remove(pilot)
+            recovered = pilot.alive_devices()
+            self._free.extend(recovered)
+            return len(recovered)
+
+    # -- placement -----------------------------------------------------------
+
+    def place(self, num_devices: int = 1, kinds: Iterable[str] = (),
+              *, pilots: Optional[Sequence[Pilot]] = None,
+              load: Optional[Dict[str, int]] = None,
+              exclude: Sequence[Pilot] = ()) -> Optional[Pilot]:
+        """Pick the pilot for a unit of work needing ``num_devices`` alive
+        devices and admitting all of ``kinds``.
+
+        Chooses by **effective free capacity**: current free devices minus
+        the caller's already-assigned-but-not-yet-leased weight (``load``,
+        a ``{pilot uid: device weight}`` overlay maintained by e.g.
+        MultiPilotScheduler so a burst of placements spreads out instead
+        of all landing on the momentarily-emptiest pilot).  Returns None
+        when no pilot qualifies — the caller decides whether that is an
+        error or a reason to wait.
+        """
+        need = max(num_devices, 1)
+        best, best_score = None, None
+        for p in (pilots if pilots is not None else self.pilots):
+            if p in exclude or not p.admits(kinds):
+                continue
+            if p.alive_count() < need:
+                continue
+            effective_free = p.free_count() - (load or {}).get(p.uid, 0)
+            score = (effective_free, p.alive_count())
+            if best_score is None or score > best_score:
+                best, best_score = p, score
+        return best

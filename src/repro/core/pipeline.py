@@ -1,6 +1,7 @@
 """Deep RC pipelines: preprocess -> train/infer -> postprocess DAGs over
 the pilot runtime (paper Fig. 2/3), plus the multi-pipeline batching mode
-of Table 4 (N pipelines under one pilot).
+of Table 4 — N pipelines under one pilot (``PipelineScheduler``) or
+spread across several disjoint pilots (``MultiPilotScheduler``).
 
 Stage readiness is **event-driven**: each stage is submitted the moment
 its dependencies complete (a task-completion callback fires the next
@@ -12,6 +13,16 @@ lock-step "submit a batch, wait for the whole batch" barrier.
 per-pipeline fault isolation: a pipeline whose stage exhausts its retries
 records the failure in its own result dict (``_error`` / ``_failed_stage``)
 without poisoning sibling pipelines.
+
+``MultiPilotScheduler`` is the layer above (the execution stack reads
+``pipeline -> PilotManager -> {pilots} -> transport``): each pipeline is
+*placed* on one of several disjoint pilots via ``PilotManager.place``
+(most effective free capacity among pilots admitting the pipeline's task
+kinds), runs there under that pilot's agent, and **migrates** its
+remaining stages to a healthier pilot if its pilot degrades below the
+pipeline's mesh requirement.  Per-pipeline device quotas (``Pipeline(...,
+quota=n)``) are enforced by the agents' dispatchers and audited through
+their lease traces.
 """
 from __future__ import annotations
 
@@ -28,7 +39,7 @@ from repro.core.task import Task, TaskDescription, TaskState
 @dataclasses.dataclass
 class Stage:
     name: str
-    fn: Callable  # fn(comm, upstream_results, *args)
+    fn: Callable  # fn(comm, upstream_results, *args[, resume_step=...])
     args: tuple = ()
     kind: str = "generic"
     num_devices: int = 1
@@ -37,6 +48,9 @@ class Stage:
     deps: Sequence[str] = ()
     priority: int = 0
     max_retries: int = 2
+    # checkpoint-aware retry: when set, fn must accept resume_step=None
+    # and is handed the last completed step on every retried attempt
+    checkpoint_dir: Optional[str] = None
 
 
 class Pipeline:
@@ -50,17 +64,26 @@ class Pipeline:
       returns.  Completion callbacks drive the DAG forward; failures are
       recorded on the pipeline (``error`` / ``failed_stage``), never raised
       into the caller.  Used by :class:`PipelineScheduler`.
+
+    ``quota`` caps how many devices this pipeline's stages may hold at
+    once on its agent (enforced by the agent dispatcher; see
+    ``RemoteAgent.set_quota``).  ``rebind(agent)`` re-points not-yet-
+    submitted stages at a different agent — the migration primitive used
+    by :class:`MultiPilotScheduler`.
     """
 
-    def __init__(self, name: str, stages: Sequence[Stage]):
+    def __init__(self, name: str, stages: Sequence[Stage],
+                 quota: Optional[int] = None):
         self.name = name
         self.stages = list(stages)
+        self.quota = quota
         self.results: Dict[str, Any] = {}
         self.tasks: Dict[str, Task] = {}
         self.error: Optional[str] = None
         self.failed_stage: Optional[str] = None
         self.started_at: Optional[float] = None
         self.finished_at: Optional[float] = None
+        self.migrations: List[Dict[str, Any]] = []
         self._lock = threading.Lock()
         self._submitted: set = set()
         self._agent: Optional[RemoteAgent] = None
@@ -75,17 +98,68 @@ class Pipeline:
             return None
         return self.finished_at - self.started_at
 
+    @property
+    def mesh_requirement(self) -> int:
+        """Widest single-stage device ask — the floor a pilot must keep
+        alive for this pipeline to run un-degraded."""
+        return max((s.num_devices for s in self.stages), default=1)
+
+    def remaining_mesh_requirement(self) -> int:
+        """Widest device ask among stages not yet submitted (0 = nothing
+        left to place).  Migration keys off this, not ``mesh_requirement``:
+        a completed wide stage must not force a pointless move."""
+        with self._lock:
+            return max((s.num_devices for s in self.stages
+                        if s.name not in self._submitted), default=0)
+
+    def stage_kinds(self) -> set:
+        return {s.kind for s in self.stages}
+
+    @property
+    def finished(self) -> bool:
+        return self._finished_evt.is_set()
+
     def start(self, agent: RemoteAgent,
               on_finish: Optional[Callable[["Pipeline"], None]] = None) -> None:
         """Submit all currently-ready stages and return immediately."""
         self._validate_dag()
-        self._agent = agent
-        self._on_finish = on_finish
+        with self._lock:
+            # first bind only: a rebind() that raced in between placement
+            # and start (pilot degraded immediately) must not be undone
+            if self._agent is None:
+                self._agent = agent
+            effective = self._agent
+            self._on_finish = on_finish
+        if self.quota is not None:
+            effective.set_quota(self.name, self.quota)
         self.started_at = time.time()
         if not self.stages:
             self._finish()
             return
         self._submit_ready()
+
+    def rebind(self, agent: RemoteAgent, reason: str = "") -> None:
+        """Migrate: stages not yet submitted will go to ``agent``.
+        In-flight tasks finish on the old agent (their results are still
+        delivered through per-task callbacks)."""
+        with self._lock:
+            old = self._agent
+            self._agent = agent
+            self.migrations.append({
+                "t": time.time(), "reason": reason,
+                "from": old.pilot.uid if old is not None else None,
+                "to": agent.pilot.uid,
+            })
+        if self.quota is not None:
+            agent.set_quota(self.name, self.quota)
+
+    def abort(self, reason: str) -> None:
+        """Mark the pipeline failed without running it (e.g. no pilot can
+        satisfy its placement requirements)."""
+        self.error = reason
+        if self.started_at is None:
+            self.started_at = time.time()
+        self._finish()
 
     def wait(self, timeout: Optional[float] = None) -> bool:
         return self._finished_evt.wait(timeout)
@@ -127,18 +201,22 @@ class Pipeline:
             ]
             self._submitted.update(s.name for s in ready)
             upstreams = [{d: self.results[d] for d in s.deps} for s in ready]
+            agent = self._agent  # read under the lock: rebind() may race
         for s, upstream in zip(ready, upstreams):
 
             def wrap(fn, upstream, args):
-                return lambda comm: fn(comm, upstream, *args)
+                # **kw forwards the agent's resume_step on checkpointed
+                # stages; plain stages never receive extra kwargs
+                return lambda comm, **kw: fn(comm, upstream, *args, **kw)
 
-            self._agent.submit_async(
+            agent.submit_async(
                 [TaskDescription(
                     name=f"{self.name}/{s.name}",
                     fn=wrap(s.fn, upstream, s.args),
                     kind=s.kind, num_devices=s.num_devices,
                     mesh_axes=s.mesh_axes, mesh_shape=s.mesh_shape,
                     priority=s.priority, max_retries=s.max_retries,
+                    group=self.name, checkpoint_dir=s.checkpoint_dir,
                 )],
                 on_complete=lambda task, s=s: self._stage_done(s, task),
             )
@@ -207,33 +285,34 @@ class PipelineScheduler:
         wall = time.time() - t0
         out: Dict[str, Dict[str, Any]] = {
             p.name: p.result_dict() for p in pipelines}
-        out["_meta"] = self._metrics(pipelines, wall)
+        out["_meta"] = aggregate_metrics(pipelines, wall)
         return out
 
-    def _metrics(self, pipelines: Sequence[Pipeline], wall: float) -> Dict[str, Any]:
-        """Table-2/Table-4 decomposition: per-pipeline wall + overheads and
-        the aggregate overlap factor (sum of task busy time / batch wall)."""
-        per_pipeline: Dict[str, Any] = {}
-        agg = {"queue_s": 0.0, "communicator_s": 0.0, "task_busy_s": 0.0,
-               "n_tasks": 0, "n_failed": 0}
-        for p in pipelines:
-            ov = {"queue_s": 0.0, "communicator_s": 0.0, "task_busy_s": 0.0}
-            for t in p.tasks.values():
-                ov["queue_s"] += t.overhead_s.get("queue", 0.0)
-                ov["communicator_s"] += t.overhead_s.get("communicator", 0.0)
-                ov["task_busy_s"] += t.duration_s or 0.0
-                agg["n_tasks"] += 1
-                agg["n_failed"] += int(t.state != TaskState.DONE)
-            per_pipeline[p.name] = {
-                "wall_s": p.wall_s, "error": p.error, **ov}
-            for k in ("queue_s", "communicator_s", "task_busy_s"):
-                agg[k] += ov[k]
-        return {
-            "wall_s": wall,
-            "per_pipeline": per_pipeline,
-            "overlap_factor": (agg["task_busy_s"] / wall) if wall > 0 else 0.0,
-            **agg,
-        }
+
+def aggregate_metrics(pipelines: Sequence[Pipeline], wall: float) -> Dict[str, Any]:
+    """Table-2/Table-4 decomposition: per-pipeline wall + overheads and
+    the aggregate overlap factor (sum of task busy time / batch wall)."""
+    per_pipeline: Dict[str, Any] = {}
+    agg = {"queue_s": 0.0, "communicator_s": 0.0, "task_busy_s": 0.0,
+           "n_tasks": 0, "n_failed": 0}
+    for p in pipelines:
+        ov = {"queue_s": 0.0, "communicator_s": 0.0, "task_busy_s": 0.0}
+        for t in p.tasks.values():
+            ov["queue_s"] += t.overhead_s.get("queue", 0.0)
+            ov["communicator_s"] += t.overhead_s.get("communicator", 0.0)
+            ov["task_busy_s"] += t.duration_s or 0.0
+            agg["n_tasks"] += 1
+            agg["n_failed"] += int(t.state != TaskState.DONE)
+        per_pipeline[p.name] = {
+            "wall_s": p.wall_s, "error": p.error, **ov}
+        for k in ("queue_s", "communicator_s", "task_busy_s"):
+            agg[k] += ov[k]
+    return {
+        "wall_s": wall,
+        "per_pipeline": per_pipeline,
+        "overlap_factor": (agg["task_busy_s"] / wall) if wall > 0 else 0.0,
+        **agg,
+    }
 
 
 def run_pipelines(
@@ -241,6 +320,7 @@ def run_pipelines(
     *,
     pilot: Optional[Pilot] = None,
     max_workers: int = 8,
+    transport=None,
 ) -> Dict[str, Dict[str, Any]]:
     """Table-4 mode: N pipelines share one pilot/agent (vs N bare-metal
     runs re-acquiring resources per pipeline).  Thin wrapper over
@@ -251,10 +331,190 @@ def run_pipelines(
     if pilot is None:
         pilot = PilotManager().submit_pilot(PilotDescription())
         own = True
-    agent = RemoteAgent(pilot, max_workers=max_workers)
+    agent = RemoteAgent(pilot, max_workers=max_workers, transport=transport)
     try:
         out = PipelineScheduler(agent).run(pipelines)
     finally:
         agent.close()
     out["_meta"].update({"pilot": pilot.uid, "owned": own})
+    return out
+
+
+class MultiPilotScheduler:
+    """Place N pipelines across several disjoint pilots (per-pod pools).
+
+    The full Table-4 stack: ``pipeline -> PilotManager.place -> {pilots}
+    -> transport``.  One RemoteAgent runs per pilot; each pipeline is
+    placed once up front (by effective free capacity among pilots that
+    admit its task kinds and satisfy its mesh requirement) and re-placed
+    — **migrated** — if its pilot's alive-device count degrades below the
+    pipeline's mesh requirement while it still has unsubmitted stages.
+    In-flight tasks drain on the old pilot; only remaining stages move.
+
+    Per-pipeline fault isolation and quota semantics are inherited from
+    Pipeline/RemoteAgent; ``run(...)['_meta']`` additionally reports the
+    placement map, migrations, per-pilot lease peaks, and any quota
+    violations (always ``{}`` unless the enforcement invariant broke).
+    """
+
+    def __init__(self, manager: PilotManager,
+                 pilots: Optional[Sequence[Pilot]] = None, *,
+                 max_workers_per_pilot: int = 4,
+                 agent_factory: Callable[..., RemoteAgent] = RemoteAgent):
+        self.manager = manager
+        self.pilots = list(pilots if pilots is not None else manager.pilots)
+        if not self.pilots:
+            raise RuntimeError("MultiPilotScheduler needs at least one pilot")
+        self.agents: Dict[str, RemoteAgent] = {
+            p.uid: agent_factory(p, max_workers=max_workers_per_pilot)
+            for p in self.pilots}
+        self._lock = threading.Lock()
+        self._pipelines: List[Pipeline] = []
+        self._placement: Dict[str, Pilot] = {}  # pipeline name -> pilot
+        # placement weight already promised to each pilot but possibly not
+        # leased yet; keeps a burst of placements spread out.  Released
+        # when a pipeline finishes so late migrations rank pilots on live
+        # load, not the initial assignment.
+        self._assigned: Dict[str, int] = {p.uid: 0 for p in self.pilots}
+        self._released: set = set()  # pipeline names whose weight returned
+        self._listeners = []
+        for p in self.pilots:
+            cb = (lambda p=p: self._on_capacity_change(p))
+            p.add_capacity_listener(cb)
+            self._listeners.append((p, cb))
+
+    # -- placement -------------------------------------------------------------
+
+    @staticmethod
+    def _weight(pipe: Pipeline) -> int:
+        return pipe.quota if pipe.quota is not None else pipe.mesh_requirement
+
+    def _place_locked(self, pipe: Pipeline, exclude: Sequence[Pilot] = (),
+                      num_devices: Optional[int] = None) -> Optional[Pilot]:
+        return self.manager.place(
+            num_devices=(num_devices if num_devices is not None
+                         else pipe.mesh_requirement),
+            kinds=pipe.stage_kinds(),
+            pilots=self.pilots, load=self._assigned, exclude=exclude)
+
+    def _release_weight(self, pipe: Pipeline) -> None:
+        with self._lock:
+            if pipe.name in self._released:
+                return
+            self._released.add(pipe.name)
+            pilot = self._placement.get(pipe.name)
+            if pilot is not None:
+                self._assigned[pilot.uid] -= self._weight(pipe)
+
+    def _on_capacity_change(self, pilot: Pilot) -> None:
+        """Migrate pipelines whose pilot degraded below their mesh
+        requirement (device failures shrink alive_count; releases never
+        do, so this is cheap on the common path)."""
+        moves: List[tuple] = []
+        with self._lock:
+            for pipe in self._pipelines:
+                if self._placement.get(pipe.name) is not pilot or pipe.finished:
+                    continue
+                need = pipe.remaining_mesh_requirement()
+                if need == 0 or pilot.alive_count() >= need:
+                    continue
+                target = self._place_locked(pipe, exclude=(pilot,),
+                                            num_devices=need)
+                if target is None:
+                    continue  # nowhere better: stay and degrade elastically
+                w = self._weight(pipe)
+                self._assigned[pilot.uid] -= w
+                self._assigned[target.uid] += w
+                self._placement[pipe.name] = target
+                moves.append((pipe, target, need))
+        for pipe, target, need in moves:
+            pipe.rebind(self.agents[target.uid],
+                        reason=f"pilot {pilot.uid} degraded below "
+                               f"{need} alive devices")
+
+    # -- run -------------------------------------------------------------------
+
+    def run(self, pipelines: Sequence[Pipeline],
+            timeout: Optional[float] = None) -> Dict[str, Dict[str, Any]]:
+        t0 = time.time()
+        placed: List[tuple] = []
+        with self._lock:
+            self._pipelines = list(pipelines)
+            for pipe in pipelines:
+                pilot = self._place_locked(pipe)
+                if pilot is not None:
+                    self._assigned[pilot.uid] += self._weight(pipe)
+                    self._placement[pipe.name] = pilot
+                placed.append((pipe, pilot))
+        for pipe, pilot in placed:
+            if pilot is None:
+                pipe.abort(
+                    f"unplaceable: no pilot admits kinds={sorted(pipe.stage_kinds())} "
+                    f"with >= {pipe.mesh_requirement} alive devices")
+            else:
+                pipe.start(self.agents[pilot.uid],
+                           on_finish=self._release_weight)
+        deadline = None if timeout is None else t0 + timeout
+        for pipe in pipelines:
+            remaining = None if deadline is None else max(0.0, deadline - time.time())
+            if not pipe.wait(remaining):
+                raise TimeoutError(
+                    f"pipeline {pipe.name} did not finish within {timeout}s")
+        wall = time.time() - t0
+        out: Dict[str, Dict[str, Any]] = {
+            p.name: p.result_dict() for p in pipelines}
+        meta = aggregate_metrics(pipelines, wall)
+        with self._lock:
+            meta["placement"] = {name: pilot.uid
+                                 for name, pilot in self._placement.items()}
+        meta["pilots"] = [p.uid for p in self.pilots]
+        meta["migrations"] = [dict(m, pipeline=p.name)
+                              for p in pipelines for m in p.migrations]
+        meta["group_peaks"] = {uid: a.group_peaks()
+                               for uid, a in self.agents.items()}
+        meta["quota_violations"] = {
+            uid: v for uid, a in self.agents.items()
+            if (v := a.quota_violations())}
+        out["_meta"] = meta
+        return out
+
+    def close(self, timeout: Optional[float] = None) -> None:
+        for p, cb in self._listeners:
+            p.remove_capacity_listener(cb)
+        self._listeners = []
+        for a in self.agents.values():
+            a.close(timeout)
+
+
+def run_pipelines_multi(
+    pipelines: Sequence[Pipeline],
+    *,
+    manager: Optional[PilotManager] = None,
+    num_pilots: int = 2,
+    max_workers_per_pilot: Optional[int] = None,
+) -> Dict[str, Dict[str, Any]]:
+    """Multi-pilot Table-4 mode: split the machine into ``num_pilots``
+    disjoint per-pod pools and spread N pipelines across them.  With a
+    caller-supplied ``manager`` its existing pilots are used as-is
+    (pre-shaped pools, e.g. kind-specialised pods); otherwise the free
+    device inventory is split evenly."""
+    if manager is None:
+        manager = PilotManager()
+    if not manager.pilots:
+        total = manager.free_devices()
+        num_pilots = max(1, min(num_pilots, total))
+        per, extra = divmod(total, num_pilots)
+        manager.submit_pilots([
+            PilotDescription(num_devices=per + (1 if i < extra else 0),
+                             name=f"pod{i}")
+            for i in range(num_pilots)])
+    if max_workers_per_pilot is None:
+        max_workers_per_pilot = max(
+            2, max(p.size for p in manager.pilots))
+    sched = MultiPilotScheduler(
+        manager, max_workers_per_pilot=max_workers_per_pilot)
+    try:
+        out = sched.run(pipelines)
+    finally:
+        sched.close()
     return out

@@ -41,6 +41,16 @@ class TaskDescription:
     timeout_s: Optional[float] = None
     speculative: bool = True  # eligible for straggler duplicate execution
     tags: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # scheduling group (typically the owning pipeline's name).  Grouped
+    # tasks share the agent's per-group device quota and appear in its
+    # lease trace; ungrouped tasks are unconstrained.
+    group: Optional[str] = None
+    # checkpoint-aware retry: when set, the agent calls
+    # ``fn(comm, *args, resume_step=<last completed step>)`` — None on the
+    # first attempt, and the latest step found under ``checkpoint_dir`` on
+    # every retry, so the task fn resumes instead of rediscovering it.
+    checkpoint_dir: Optional[str] = None
+    resume_step: Optional[int] = None  # written by the agent, not the user
 
 
 @dataclasses.dataclass

@@ -1,0 +1,83 @@
+"""Task transports: where a leased task attempt actually executes.
+
+The execution stack is layered ``pipeline -> PilotManager -> Pilot ->
+Transport``: the PilotManager places pipelines on pilots, the pilot's
+RemoteAgent decides *when* a task runs (condition-variable dispatcher,
+quotas, retries, speculation), and the Transport decides *where* the
+attempt's body runs.  The dispatcher stays the single master: a transport
+never schedules, it only executes what the dispatcher hands it and
+reports completion through the returned Future.
+
+``InProcessTransport`` is the default (a thread pool in the agent's
+process — the right answer for a single-host jax device pool, where every
+worker shares one jax runtime).  The interface is deliberately shaped so
+a cross-node transport can slot in later: ``submit`` takes a callable and
+returns a ``concurrent.futures.Future``, and ``capacity`` bounds how many
+attempts the dispatcher keeps in flight.  A subprocess / jax-distributed
+transport must additionally require picklable task functions; that
+constraint lives here, not in the agent.
+"""
+from __future__ import annotations
+
+import abc
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Optional
+
+
+class Transport(abc.ABC):
+    """Executes task attempts on behalf of a RemoteAgent dispatcher."""
+
+    name: str = "abstract"
+    #: max attempts the transport can run concurrently (None = unbounded);
+    #: the agent clamps its in-flight window to this.
+    capacity: Optional[int] = None
+
+    @abc.abstractmethod
+    def submit(self, fn: Callable, *args) -> Future:
+        """Run ``fn(*args)`` somewhere; resolve the Future when it returns.
+        Must never raise synchronously for an execution error — errors
+        travel through the Future (the agent's isolation boundary is
+        inside ``fn`` itself)."""
+
+    @abc.abstractmethod
+    def shutdown(self, wait: bool = True) -> None:
+        """Stop accepting work and (optionally) drain in-flight attempts."""
+
+
+class InProcessTransport(Transport):
+    """Thread-pool execution inside the agent's process (single-host)."""
+
+    name = "in-process"
+
+    def __init__(self, max_workers: int = 4,
+                 thread_name_prefix: str = "rc-worker"):
+        self.capacity = max_workers
+        self._pool = ThreadPoolExecutor(max_workers=max_workers,
+                                        thread_name_prefix=thread_name_prefix)
+
+    def submit(self, fn: Callable, *args) -> Future:
+        return self._pool.submit(fn, *args)
+
+    def shutdown(self, wait: bool = True) -> None:
+        self._pool.shutdown(wait=wait)
+
+
+class JaxDistributedTransport(Transport):
+    """Placeholder for cross-node dispatch (one jax-distributed worker per
+    remote host).  Not implemented yet — the container image has no
+    multi-host fabric to run it against; the class exists so the shape of
+    the contract (picklable fns, per-worker jax.distributed.initialize)
+    is pinned down where it belongs."""
+
+    name = "jax-distributed"
+
+    def __init__(self, *a, **kw):
+        raise NotImplementedError(
+            "cross-node transport is not available in this build; use "
+            "InProcessTransport (see ROADMAP: cross-node dispatch)")
+
+    def submit(self, fn: Callable, *args) -> Future:  # pragma: no cover
+        raise NotImplementedError
+
+    def shutdown(self, wait: bool = True) -> None:  # pragma: no cover
+        raise NotImplementedError

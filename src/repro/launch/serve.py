@@ -19,6 +19,7 @@ from repro.configs.base import RunConfig
 from repro.core.agent import RemoteAgent
 from repro.core.pilot import PilotDescription, PilotManager
 from repro.core.task import TaskDescription
+from repro.core.transport import InProcessTransport
 from repro.models.lm import lm_apply
 from repro.train.state import cache_specs, model_specs
 from repro.train.step import make_decode_step
@@ -67,7 +68,8 @@ def run(args) -> dict:
         }
 
     pm = PilotManager()
-    agent = RemoteAgent(pm.submit_pilot(PilotDescription()), max_workers=1)
+    agent = RemoteAgent(pm.submit_pilot(PilotDescription()),
+                        transport=InProcessTransport(max_workers=1))
     task, = agent.submit([TaskDescription(name="serve", fn=serve_task,
                                           kind="inference")])
     if task.error:

@@ -65,12 +65,18 @@ def run(args) -> dict:
         )
         return table
 
-    def train(comm, upstream):
+    def train(comm, upstream, resume_step=None):
         table = upstream["preprocess"]
         state = init_train_state(jax.random.PRNGKey(args.seed), cfg, run_cfg)
         start_step = 0
-        if args.resume and store.latest_step(ckpt_dir) is not None:
-            state = store.restore(ckpt_dir, state)
+        # resume_step is threaded in by the agent on checkpoint-aware
+        # retry (stage declares checkpoint_dir); --resume covers the
+        # cold-start case where the user restarts the whole driver
+        resume_from = resume_step
+        if resume_from is None and args.resume:
+            resume_from = store.latest_step(ckpt_dir)
+        if resume_from is not None:
+            state = store.restore(ckpt_dir, state, step=resume_from)
             start_step = int(state["step"])
             print(f"[train] resumed from step {start_step}")
         step_fn = jax.jit(make_train_step(cfg, run_cfg), donate_argnums=(0,))
@@ -106,7 +112,8 @@ def run(args) -> dict:
 
     pipe = Pipeline(f"train-{cfg.name}", [
         cylon_stage("preprocess", preprocess),
-        dl_stage("train", train, deps=("preprocess",)),
+        dl_stage("train", train, deps=("preprocess",),
+                 checkpoint_dir=ckpt_dir),
         dl_stage("postprocess", postprocess, deps=("train",), kind="inference"),
     ])
     out = pipe.run(agent)

@@ -41,11 +41,29 @@ assert t.state == TaskState.DONE, t.error
 assert t.result == 6, t.result  # re-carved on 6 survivors
 print("elastic recovery OK: reran on", t.result, "devices; alive:", len(pilot.alive_devices()))
 
-# pipeline DAG
+# disjoint pools: the first pilot owns all 8 devices, so a second submit
+# must raise until the first pilot is canceled (seed bug: devices[:n]
+# handed out overlapping slices silently)
+try:
+    pm.submit_pilot(PilotDescription(num_devices=2))
+    raise AssertionError("overlapping pilot was handed out")
+except RuntimeError as e:
+    print("exhausted-pool submit raises OK:", e)
+agent.close()
+recovered = pm.cancel_pilot(pilot)
+assert recovered == 6, recovered  # 2 devices died above and stay retired
+pilot2 = pm.submit_pilot(PilotDescription(num_devices=4))
+pilot3 = pm.submit_pilot(PilotDescription(num_devices=2))
+ids2 = {d.id for d in pilot2.alive_devices()}
+ids3 = {d.id for d in pilot3.alive_devices()}
+assert not ids2 & ids3, f"pilot pools overlap: {ids2 & ids3}"
+print("disjoint pools OK:", sorted(ids2), "|", sorted(ids3))
+
+# pipeline DAG on the re-acquired disjoint pilot
 def produce(comm, upstream): return 21
 def consume(comm, upstream): return upstream["produce"] * 2
 p = Pipeline("demo", [Stage("produce", produce), Stage("consume", consume, deps=("produce",))])
-out = p.run(RemoteAgent(pm.submit_pilot(PilotDescription(num_devices=8)), max_workers=2))
+out = p.run(RemoteAgent(pilot2, max_workers=2))
 assert out["consume"] == 42
 print("pipeline DAG OK:", out)
 
