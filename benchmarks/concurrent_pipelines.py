@@ -26,7 +26,6 @@ or through the harness: ``python -m benchmarks.run --which concurrent``.
 """
 from __future__ import annotations
 
-import json
 import os
 import sys
 
@@ -103,18 +102,9 @@ def _build_wide_pipeline(n_stages: int, rows: int, quota: int):
 def _record(update: dict) -> None:
     """Merge new scenario numbers into results/bench/multi_pipeline.json,
     preserving the PR 1 keys already there (paper_tables._dump applies the
-    same merge from its side; both tolerate a corrupt/truncated file)."""
-    data = {}
-    if os.path.exists(RESULTS_JSON):
-        try:
-            with open(RESULTS_JSON) as f:
-                data = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            data = {}
-    data.update(update)
-    os.makedirs(os.path.dirname(RESULTS_JSON), exist_ok=True)
-    with open(RESULTS_JSON, "w") as f:
-        json.dump(data, f, indent=1)
+    same merge from its side)."""
+    from benchmarks.results_io import merge_record
+    merge_record(RESULTS_JSON, update)
 
 
 def bench_concurrent_pipelines(full: bool = False,

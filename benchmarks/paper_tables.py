@@ -305,15 +305,5 @@ def _dump(name: str, obj) -> None:
     record different sections of the same file (e.g. multi_pipeline.json
     also carries the concurrent_pipelines multi-pilot scenario), so a
     whole-file overwrite would clobber sibling results."""
-    os.makedirs(os.path.join(REPO, "results", "bench"), exist_ok=True)
-    path = os.path.join(REPO, "results", "bench", f"{name}.json")
-    data = {}
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                data = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            data = {}
-    data.update(obj)
-    with open(path, "w") as f:
-        json.dump(data, f, indent=1, default=float)
+    from benchmarks.results_io import bench_json, merge_record
+    merge_record(bench_json(name), obj)

@@ -1,0 +1,35 @@
+"""Shared merge-preserving writer for results/bench/*.json.
+
+Several benchmarks record different sections of the same file (e.g.
+``multi_pipeline.json`` carries both the paper-tables Table-4 numbers and
+the concurrent-scheduler multi-pilot scenario), so a whole-file overwrite
+would clobber sibling results.  One implementation lives here; every
+bench writer goes through it.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_DIR = os.path.join(REPO, "results", "bench")
+
+
+def merge_record(path: str, update: dict) -> None:
+    """Merge ``update`` into the JSON file at ``path`` (created if absent;
+    a corrupt/truncated file is treated as empty, never a crash)."""
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            data = {}
+    data.update(update)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, default=float)
+
+
+def bench_json(name: str) -> str:
+    return os.path.join(BENCH_DIR, f"{name}.json")

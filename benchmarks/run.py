@@ -12,11 +12,12 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--which", default="all",
                     help="comma list: forecasting,hydrology,scaling,"
-                         "multi_pipeline,concurrent,roofline")
+                         "multi_pipeline,concurrent,roofline,serving")
     args = ap.parse_args()
     from benchmarks import paper_tables as P
     from benchmarks import roofline as R
     from benchmarks.concurrent_pipelines import bench_concurrent_pipelines
+    from benchmarks.serving import bench_serving
 
     benches = {
         "hydrology": P.bench_hydrology,          # paper Tables 1-2
@@ -25,6 +26,7 @@ def main() -> None:
         "multi_pipeline": P.bench_multi_pipeline,  # paper Table 4
         "concurrent": bench_concurrent_pipelines,  # Table 4, async scheduler
         "roofline": R.bench_roofline,            # beyond-paper: §Roofline
+        "serving": bench_serving,                # beyond-paper: continuous batching
     }
     which = list(benches) if args.which == "all" else args.which.split(",")
     print("name,us_per_call,derived")

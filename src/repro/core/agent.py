@@ -35,7 +35,16 @@ Runnability features the brief requires at scale:
   in ``lease_trace`` and ``group_peaks()`` so fairness is auditable;
 * **checkpoint-aware retry** — a retried task whose description names a
   ``checkpoint_dir`` is re-submitted with ``resume_step`` set to the last
-  completed step found there, instead of the task fn rediscovering it.
+  completed step found there, instead of the task fn rediscovering it;
+* **service tasks + priority preemption** — a ``service=True`` task is a
+  long-running stage (e.g. a continuous-batching inference engine) that
+  holds its lease and is driven through its ``ServiceControl``.  When
+  higher-priority work is starved of devices or worker slots, the
+  dispatcher requests preemption; the service checkpoints its state and
+  raises ``ServicePreempted``, the lease is released, and the task is
+  re-queued (no retry budget consumed) to resume with
+  ``resume_state=<checkpoint>`` once capacity frees up.  Service tasks
+  are never speculated and never pollute the straggler duration medians.
 
 Historical bug notes (regression-tested in tests/test_scheduler.py):
 ``Future.result(timeout=...)`` raises ``concurrent.futures.TimeoutError``,
@@ -59,7 +68,9 @@ from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from repro.checkpoint import store as ckpt_store
 from repro.core.pilot import Pilot
-from repro.core.task import DeviceFailure, Task, TaskDescription, TaskState
+from repro.core.task import (
+    DeviceFailure, ServicePreempted, Task, TaskDescription, TaskState,
+)
 from repro.core.transport import InProcessTransport, Transport
 
 # Python 3.10: concurrent.futures.TimeoutError is distinct from the builtin;
@@ -110,6 +121,8 @@ class RemoteAgent:
         self._lease_sizes: Dict[str, Tuple[Optional[str], int]] = {}
         self.lease_trace: Deque[Tuple[float, str, int, int]] = \
             collections.deque(maxlen=lease_trace_limit)
+        #: total preemption requests issued to service tasks (auditable)
+        self.preemption_requests = 0
         self._closed = False
         pilot.add_capacity_listener(self._wake)
         self._dispatcher = threading.Thread(
@@ -202,7 +215,14 @@ class RemoteAgent:
                 t.finalized = True
             specs = list(self._spec.values())  # snapshot under the cond:
             # workers pop from _spec concurrently
+            service_controls = [
+                t.description.control for t in self._running.values()
+                if t.description.service and t.description.control is not None]
             self._cond.notify_all()
+        # a service task never returns on its own — without a stop signal
+        # the transport drain below would hang forever
+        for c in service_controls:
+            c.stop()
         for t in abandoned:
             self._finalize(t)
         for _, fut in specs:
@@ -297,18 +317,30 @@ class RemoteAgent:
         if self._closed:
             return
         still: List[Task] = []
+        starved: List[Task] = []  # blocked on capacity (not quota) — these
+        # can justify preempting a lower-priority service task
         for t in self._pending:
-            if len(self._running) + len(self._spec) >= self.max_workers:
+            d = t.description
+            if d.service and any(
+                    s.description.priority > d.priority for s in starved):
+                # a (possibly just-preempted) service must not re-grab
+                # devices while strictly-higher-priority work is still
+                # starved — otherwise preempt/relaunch thrashes, copying
+                # the engine checkpoint in a tight loop
                 still.append(t)
                 continue
-            d = t.description
+            if len(self._running) + len(self._spec) >= self.max_workers:
+                still.append(t)
+                starved.append(t)
+                continue
             n = min(d.num_devices, max(len(self.pilot.alive_devices()), 1))
             headroom = self._quota_headroom_locked(d.group)
             if headroom is not None:
                 if headroom < 1:
                     # over quota: this task waits, later (other-group)
                     # tasks still get considered — backpressure without
-                    # head-of-line blocking
+                    # head-of-line blocking (a preemption would not help:
+                    # the group's own quota is the limit)
                     still.append(t)
                     continue
                 # a wide task shrinks to its group's remaining share, the
@@ -317,6 +349,7 @@ class RemoteAgent:
             devices = self.pilot.lease(n, t.uid)
             if devices is None:
                 still.append(t)
+                starved.append(t)
                 continue
             t.state = TaskState.RUNNING
             self._running[t.uid] = t
@@ -325,7 +358,34 @@ class RemoteAgent:
             if not self._submit_attempt_locked(t, devices, t.uid, d.group):
                 self._running.pop(t.uid, None)
         self._pending = still
+        self._maybe_preempt_locked(starved)
         self._check_stragglers_locked()
+
+    def _maybe_preempt_locked(self, starved: List[Task]) -> None:
+        """Ask ONE running service task to yield when strictly-higher-
+        priority work is starved of devices or worker slots — the
+        lowest-priority service first; if the starved work still cannot
+        launch after that yield, the next dispatch pass escalates to the
+        next service.  Cooperative: the service notices between work
+        units, checkpoints, and raises ``ServicePreempted``; its lease is
+        released on the way out.  One-at-a-time matters: every preemption
+        costs a full engine checkpoint/restore cycle, so yielding every
+        service at once for a one-device deficit doubles serving
+        disruption for nothing."""
+        if not starved:
+            return
+        top = max(t.description.priority for t in starved)
+        victims = [
+            t for t in self._running.values()
+            if (t.description.service and t.description.control is not None
+                and t.description.priority < top
+                and t.state == TaskState.RUNNING)]
+        if any(t.description.control.preempt_requested() for t in victims):
+            return  # a yield is already in flight; let it land first
+        if victims:
+            victim = min(victims, key=lambda t: t.description.priority)
+            victim.description.control.request_preempt()
+            self.preemption_requests += 1
 
     def _fail_if_pool_dead_locked(self) -> None:
         if (self._pending and not self._running and not self._spec
@@ -400,12 +460,17 @@ class RemoteAgent:
             if is_primary:
                 task.overhead_s["communicator"] = time.time() - t0
                 task.started_at = time.time()
+            kwargs = {}
             if d.checkpoint_dir is not None:
                 # checkpoint-aware contract: fn accepts resume_step=None on
                 # the first attempt; retries get the last completed step
-                result = d.fn(comm, *d.args, resume_step=d.resume_step)
-            else:
-                result = d.fn(comm, *d.args)
+                kwargs["resume_step"] = d.resume_step
+            if d.service:
+                # service contract: fn accepts the control handle and (on
+                # resume after preemption) its own checkpointed state
+                kwargs["control"] = d.control
+                kwargs["resume_state"] = d.resume_state
+            result = d.fn(comm, *d.args, **kwargs)
             finished = time.time()
             with self._result_lock:
                 if task.state == TaskState.DONE:
@@ -415,7 +480,19 @@ class RemoteAgent:
                 task.error = None  # a retry succeeded: stale error must not
                 # make error-checking callers reject a DONE task
                 task.state = TaskState.DONE
-                self._durations.setdefault(d.kind, []).append(task.duration_s)
+                if not d.service:
+                    # a service run's duration is its lifetime, not a unit
+                    # of work — it must not drag straggler medians around
+                    self._durations.setdefault(d.kind, []).append(task.duration_s)
+        except ServicePreempted as e:
+            with self._result_lock:
+                if task.state == TaskState.DONE:
+                    return
+                task.finished_at = time.time()
+                d.resume_state = e.state
+                task.preemptions += 1
+                task.attempts -= 1  # preemption is a yield, not a failure
+                task.state = TaskState.PREEMPTED
         except DeviceFailure as e:
             self.pilot.mark_failed(e.device_ids)
             with self._result_lock:
@@ -472,6 +549,23 @@ class RemoteAgent:
                         self._pending.sort(key=lambda t: (
                             -t.description.priority, self._order[t.uid]))
                     else:
+                        task.finalized = True
+                        to_finalize = True
+                elif task.state == TaskState.PREEMPTED and not in_flight:
+                    if not self._closed and self.pilot.alive_devices():
+                        # re-queue at the task's own priority: the work
+                        # that preempted it sorts first, and the service
+                        # resumes (resume_state already stashed) once
+                        # devices free up again
+                        if task.description.control is not None:
+                            task.description.control._clear_preempt()
+                        task.state = TaskState.PENDING
+                        self._pending.append(task)
+                        self._pending.sort(key=lambda t: (
+                            -t.description.priority, self._order[t.uid]))
+                    else:
+                        task.state = TaskState.CANCELED
+                        task.error = "agent closed while service was preempted"
                         task.finalized = True
                         to_finalize = True
             self._cond.notify_all()

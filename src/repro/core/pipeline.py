@@ -33,7 +33,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from repro.core.agent import RemoteAgent
 from repro.core.pilot import Pilot, PilotDescription, PilotManager
-from repro.core.task import Task, TaskDescription, TaskState
+from repro.core.task import ServiceControl, Task, TaskDescription, TaskState
 
 
 @dataclasses.dataclass
@@ -51,6 +51,13 @@ class Stage:
     # checkpoint-aware retry: when set, fn must accept resume_step=None
     # and is handed the last completed step on every retried attempt
     checkpoint_dir: Optional[str] = None
+    # service stage: a long-running task (fn must accept control= and
+    # resume_state= kwargs) that is EXCLUDED from the pipeline's
+    # stage-completion barrier — the pipeline finishes when its ordinary
+    # stages do, while the service keeps running until its control handle
+    # is told to drain/stop (see Pipeline.control / stop_services).  A
+    # service stage may not be a dependency of another stage.
+    service: bool = False
 
 
 class Pipeline:
@@ -70,6 +77,13 @@ class Pipeline:
     ``RemoteAgent.set_quota``).  ``rebind(agent)`` re-points not-yet-
     submitted stages at a different agent — the migration primitive used
     by :class:`MultiPilotScheduler`.
+
+    Stages with ``service=True`` are long-running (e.g. a continuous-
+    batching inference engine): they are excluded from the completion
+    barrier — the pipeline finishes when its ordinary stages do — and are
+    driven through their :class:`ServiceControl` (``control(name)`` /
+    ``stop_services``).  The agent may preempt them for higher-priority
+    work; they resume with their checkpointed state.
     """
 
     def __init__(self, name: str, stages: Sequence[Stage],
@@ -84,10 +98,15 @@ class Pipeline:
         self.started_at: Optional[float] = None
         self.finished_at: Optional[float] = None
         self.migrations: List[Dict[str, Any]] = []
+        # one control handle per service stage, created eagerly so callers
+        # can hold the handle before (and across) the stage's task attempts
+        self.service_controls: Dict[str, ServiceControl] = {
+            s.name: ServiceControl() for s in self.stages if s.service}
         self._lock = threading.Lock()
         self._submitted: set = set()
         self._agent: Optional[RemoteAgent] = None
         self._on_finish: Optional[Callable[["Pipeline"], None]] = None
+        self._finishing = False  # test-and-set under _lock (see _finish)
         self._finished_evt = threading.Event()
 
     # -- public ----------------------------------------------------------------
@@ -137,6 +156,12 @@ class Pipeline:
             self._finish()
             return
         self._submit_ready()
+        with self._lock:
+            finished = self._is_finished_locked()
+        if finished:
+            # all stages are services: the barrier is trivially satisfied
+            # the moment they are submitted (they run until drained/stopped)
+            self._finish()
 
     def rebind(self, agent: RemoteAgent, reason: str = "") -> None:
         """Migrate: stages not yet submitted will go to ``agent``.
@@ -164,6 +189,29 @@ class Pipeline:
     def wait(self, timeout: Optional[float] = None) -> bool:
         return self._finished_evt.wait(timeout)
 
+    def control(self, stage_name: str) -> ServiceControl:
+        """Control handle of a service stage (submit_request/drain/stop)."""
+        return self.service_controls[stage_name]
+
+    def stop_services(self, drain: bool = True,
+                      timeout: Optional[float] = None) -> bool:
+        """Drain (default) or hard-stop every service stage and wait for
+        their tasks to finalize.  Returns False on timeout.  Service
+        results land in ``results[<stage>]`` like any other stage — they
+        are just never part of the completion barrier."""
+        for ctl in self.service_controls.values():
+            (ctl.drain if drain else ctl.stop)()
+        deadline = None if timeout is None else time.time() + timeout
+        for name in self.service_controls:
+            task = self.tasks.get(name)
+            if task is None:
+                continue  # never submitted (deps unmet / pipeline aborted)
+            remaining = (None if deadline is None
+                         else max(0.0, deadline - time.time()))
+            if not task.wait(remaining):
+                return False
+        return True
+
     def run(self, agent: RemoteAgent) -> Dict[str, Any]:
         """Blocking single-pipeline execution; raises on stage failure."""
         self.start(agent)
@@ -180,6 +228,14 @@ class Pipeline:
             # duplicate would make completion counting hang, not overwrite
             raise RuntimeError(
                 f"pipeline {self.name}: duplicate stage names")
+        service_names = {s.name for s in self.stages if s.service}
+        for s in self.stages:
+            bad = service_names & set(s.deps)
+            if bad:  # a service never "completes" in the barrier sense, so
+                # a dependent stage would wait forever
+                raise RuntimeError(
+                    f"pipeline {self.name}: stage {s.name} depends on "
+                    f"service stage(s) {sorted(bad)}")
         done: set = set()
         remaining = list(self.stages)
         while remaining:
@@ -206,10 +262,11 @@ class Pipeline:
 
             def wrap(fn, upstream, args):
                 # **kw forwards the agent's resume_step on checkpointed
-                # stages; plain stages never receive extra kwargs
+                # stages (and control/resume_state on service stages);
+                # plain stages never receive extra kwargs
                 return lambda comm, **kw: fn(comm, upstream, *args, **kw)
 
-            agent.submit_async(
+            tasks = agent.submit_async(
                 [TaskDescription(
                     name=f"{self.name}/{s.name}",
                     fn=wrap(s.fn, upstream, s.args),
@@ -217,33 +274,69 @@ class Pipeline:
                     mesh_axes=s.mesh_axes, mesh_shape=s.mesh_shape,
                     priority=s.priority, max_retries=s.max_retries,
                     group=self.name, checkpoint_dir=s.checkpoint_dir,
+                    service=s.service,
+                    control=self.service_controls.get(s.name),
                 )],
                 on_complete=lambda task, s=s: self._stage_done(s, task),
             )
+            if s.service:
+                # recorded at submit so stop_services (and callers reading
+                # live stats) can reach the task before it finalizes
+                with self._lock:
+                    self.tasks[s.name] = tasks[0]
 
     def _stage_done(self, stage: Stage, task: Task) -> None:
         with self._lock:
             self.tasks[stage.name] = task
             if task.state == TaskState.DONE:
                 self.results[stage.name] = task.result
-            elif self.error is None:
+            elif not stage.service and self.error is None:
                 self.error = f"stage {stage.name} failed: {task.error}"
                 self.failed_stage = stage.name
+            elif stage.service:
+                # service failure/cancellation is isolated: recorded on
+                # the task (and absent from results), never poisons the
+                # pipeline's ordinary stages or flips a finished pipeline
+                # back into error state
+                pass
             finished = self._is_finished_locked()
         if finished:
             self._finish()
         elif self.error is None:
             self._submit_ready()
 
+    def _barrier_stages(self) -> List[Stage]:
+        """Stages that participate in the completion barrier (everything
+        except long-running service stages)."""
+        return [s for s in self.stages if not s.service]
+
     def _is_finished_locked(self) -> bool:
-        if len(self.results) == len(self.stages):
+        barrier = self._barrier_stages()
+        if sum(1 for s in barrier if s.name in self.results) == len(barrier):
             return True
         if self.error is not None:
-            # finished once every in-flight task has reported back
-            return len(self.tasks) == len(self._submitted)
+            # finished once every in-flight barrier task has reported back
+            names = {s.name for s in barrier}
+            reported = len([n for n in self.tasks
+                            if n in names and self.tasks[n].finalized])
+            return reported == len(self._submitted & names)
         return False
 
     def _finish(self) -> None:
+        with self._lock:
+            # idempotent AND race-free: _finish can arrive concurrently
+            # from start()'s all-service recheck (caller thread) and from
+            # _stage_done (worker threads) — exactly one may fire
+            # on_finish, or scheduler completion counting corrupts
+            if self._finishing:
+                return
+            self._finishing = True
+        if self.error is not None:
+            # a failed pipeline must not leak its services: nobody is
+            # coming back to drain them, and a running service pins its
+            # device lease (cancel_pilot would refuse forever)
+            for ctl in self.service_controls.values():
+                ctl.stop()
         self.finished_at = time.time()
         self._finished_evt.set()
         if self._on_finish is not None:
@@ -302,7 +395,8 @@ def aggregate_metrics(pipelines: Sequence[Pipeline], wall: float) -> Dict[str, A
             ov["communicator_s"] += t.overhead_s.get("communicator", 0.0)
             ov["task_busy_s"] += t.duration_s or 0.0
             agg["n_tasks"] += 1
-            agg["n_failed"] += int(t.state != TaskState.DONE)
+            # a still-running service task is neither done nor failed
+            agg["n_failed"] += int(t.finalized and t.state != TaskState.DONE)
         per_pipeline[p.name] = {
             "wall_s": p.wall_s, "error": p.error, **ov}
         for k in ("queue_s", "communicator_s", "task_busy_s"):

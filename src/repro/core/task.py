@@ -8,11 +8,12 @@ a task failure never propagates outside its Task record.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import enum
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 
 class TaskState(enum.Enum):
@@ -21,6 +22,114 @@ class TaskState(enum.Enum):
     DONE = "done"
     FAILED = "failed"
     CANCELED = "canceled"
+    # a service task that yielded its devices to higher-priority work; the
+    # agent re-queues it (with its checkpointed state) — transient, like a
+    # FAILED task awaiting retry, and never consumes retry budget
+    PREEMPTED = "preempted"
+
+
+class ServicePreempted(Exception):
+    """Raised by a service task body to yield its devices.
+
+    ``state`` is the service's checkpoint (whatever its ``resume_state``
+    contract accepts); the agent stashes it on the TaskDescription and
+    re-invokes the task with ``resume_state=state`` once devices free up.
+    Preemption is cooperative: the agent requests it through the task's
+    :class:`ServiceControl`, and the service raises between work units.
+    """
+
+    def __init__(self, state: Any = None):
+        super().__init__("service preempted")
+        self.state = state
+
+
+class ServiceControl:
+    """Control handle for a ``service=True`` task (a long-running stage).
+
+    The submitting side holds this object and uses ``submit_request`` /
+    ``drain`` / ``stop``; the service body polls ``take_requests`` /
+    ``preempt_requested`` / ``stop_requested`` between work units.  The
+    handle lives on the TaskDescription, so it survives preemption and
+    retries — requests queued while the service is yielded are delivered
+    when it resumes.
+    """
+
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._inbox: Deque[Any] = collections.deque()
+        self._stop = False
+        self._drain = False
+        self._preempt = False
+        self.accepted = 0
+
+    # -- submitting side -----------------------------------------------------
+
+    def submit_request(self, request: Any) -> Any:
+        """Queue a request for the service; returns the request."""
+        with self._cond:
+            if self._stop or self._drain:
+                raise RuntimeError(
+                    "service is stopping/draining; not accepting requests")
+            self._inbox.append(request)
+            self.accepted += 1
+            self._cond.notify_all()
+        return request
+
+    def drain(self) -> None:
+        """Stop admitting new requests; the service exits once every
+        accepted request has finished."""
+        with self._cond:
+            self._drain = True
+            self._cond.notify_all()
+
+    def stop(self) -> None:
+        """Ask the service to exit as soon as possible (accepted requests
+        may be abandoned; use ``drain`` first for a graceful stop)."""
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+
+    # -- agent side ----------------------------------------------------------
+
+    def request_preempt(self) -> None:
+        with self._cond:
+            self._preempt = True
+            self._cond.notify_all()
+
+    def _clear_preempt(self) -> None:
+        with self._cond:
+            self._preempt = False
+
+    # -- service body --------------------------------------------------------
+
+    def take_requests(self, max_n: Optional[int] = None) -> List[Any]:
+        """Pop up to ``max_n`` queued requests (all of them by default)."""
+        with self._cond:
+            n = len(self._inbox) if max_n is None else min(max_n, len(self._inbox))
+            return [self._inbox.popleft() for _ in range(n)]
+
+    def pending_requests(self) -> int:
+        with self._cond:
+            return len(self._inbox)
+
+    def stop_requested(self) -> bool:
+        with self._cond:
+            return self._stop
+
+    def drain_requested(self) -> bool:
+        with self._cond:
+            return self._drain
+
+    def preempt_requested(self) -> bool:
+        with self._cond:
+            return self._preempt
+
+    def wait_for_work(self, timeout: Optional[float] = None) -> bool:
+        """Idle-wait until a request arrives or a control flag flips."""
+        with self._cond:
+            if self._inbox or self._stop or self._drain or self._preempt:
+                return True
+            return self._cond.wait(timeout)
 
 
 @dataclasses.dataclass
@@ -51,6 +160,25 @@ class TaskDescription:
     # every retry, so the task fn resumes instead of rediscovering it.
     checkpoint_dir: Optional[str] = None
     resume_step: Optional[int] = None  # written by the agent, not the user
+    # service mode: a long-running stage (e.g. a continuous-batching
+    # inference engine) that holds its lease until told to stop.  The
+    # agent calls ``fn(comm, *args, control=<ServiceControl>,
+    # resume_state=None)``; the fn may raise :class:`ServicePreempted`
+    # (carrying its checkpoint) when ``control.preempt_requested()`` —
+    # the agent releases the lease and re-queues the task, and the next
+    # attempt receives ``resume_state=<checkpoint>``.  Preemption never
+    # consumes retry budget.
+    service: bool = False
+    control: Optional[ServiceControl] = None
+    resume_state: Any = None  # written by the agent, not the user
+
+    def __post_init__(self):
+        if self.service:
+            if self.control is None:
+                self.control = ServiceControl()
+            # a duplicate engine racing the primary would double-serve
+            # requests — service tasks are never speculated
+            self.speculative = False
 
 
 @dataclasses.dataclass
@@ -61,6 +189,7 @@ class Task:
     result: Any = None
     error: Optional[str] = None
     attempts: int = 0
+    preemptions: int = 0  # times a service attempt yielded to higher priority
     submitted_at: float = dataclasses.field(default_factory=time.time)
     started_at: Optional[float] = None
     finished_at: Optional[float] = None

@@ -77,7 +77,17 @@ class JaxDistributedTransport(Transport):
             "InProcessTransport (see ROADMAP: cross-node dispatch)")
 
     def submit(self, fn: Callable, *args) -> Future:  # pragma: no cover
-        raise NotImplementedError
+        raise NotImplementedError(
+            "JaxDistributedTransport.submit: cross-node dispatch needs a "
+            "picklable task fn shipped to a remote worker that has run "
+            "jax.distributed.initialize(coordinator, num_processes, "
+            "process_id) — the single-process thread-pool contract of "
+            "InProcessTransport does not transfer; see ROADMAP "
+            "'cross-node dispatch'")
 
     def shutdown(self, wait: bool = True) -> None:  # pragma: no cover
-        raise NotImplementedError
+        raise NotImplementedError(
+            "JaxDistributedTransport.shutdown: would need to drain remote "
+            "workers and tear down the jax.distributed coordinator; no "
+            "multi-host fabric exists in this build (see ROADMAP "
+            "'cross-node dispatch')")

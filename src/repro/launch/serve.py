@@ -1,94 +1,121 @@
-"""Batched serving driver: prefill once, decode tokens with a KV cache,
-under the pilot runtime (the paper's inference-task kind).
+"""Serving driver: a continuous-batching ServeEngine running as a
+long-running *service stage* on the pilot runtime (the paper's inference
+task kind living beside data engineering and training on one scheduler).
+
+The engine prefills admitted prompts in ONE batched full-sequence forward
+(no token-by-token replay), packs their KV rows into free slots of a
+fixed ``[max_slots, max_len]`` cache, and fuses every occupied slot into
+a single decode step.  The service stage holds its lease, is excluded
+from the pipeline completion barrier, and yields to higher-priority
+training work via checkpoint/resume preemption (see ``repro.serve``).
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --smoke \
-      --batch 4 --prompt-len 32 --gen 16
+      --batch 4 --prompt-len 32 --gen 16 [--slots 4]
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.common.params import init_params
 from repro.configs import get_config
 from repro.configs.base import RunConfig
 from repro.core.agent import RemoteAgent
 from repro.core.pilot import PilotDescription, PilotManager
-from repro.core.task import TaskDescription
-from repro.core.transport import InProcessTransport
-from repro.models.lm import lm_apply
-from repro.train.state import cache_specs, model_specs
-from repro.train.step import make_decode_step
+from repro.core.pipeline import Pipeline, Stage
+from repro.serve import Request, ServeEngine
 
 
 def run(args) -> dict:
     cfg = get_config(args.arch, smoke=args.smoke)
     if cfg.is_encoder_decoder or cfg.input_kind == "embeds":
         raise SystemExit("serve driver targets token-LM archs")
-    run_cfg = RunConfig()
-    max_len = args.prompt_len + args.gen
+    slots = args.slots or min(args.batch, 4)
+    max_len = args.prompt_len + args.gen + 1
+    engine = ServeEngine(cfg, RunConfig(), max_slots=slots, max_len=max_len,
+                         seed=0)
 
-    def serve_task(comm):
-        params = init_params(jax.random.PRNGKey(0), model_specs(cfg))
-        B = args.batch
-        prompts = jax.random.randint(
-            jax.random.PRNGKey(1), (B, args.prompt_len), 0, cfg.vocab_size
-        )
-        # prefill: run the full prompt once and collect the KV cache by
-        # replaying tokens through the decode path (cache-building prefill)
-        cache = init_params(jax.random.PRNGKey(2), cache_specs(cfg, B, max_len))
-        decode = jax.jit(make_decode_step(cfg, run_cfg), donate_argnums=(2,))
-        t0 = time.time()
-        next_tok = prompts[:, :1]
-        for t in range(args.prompt_len):
-            tok = prompts[:, t:t + 1]
-            next_tok, logits, cache = decode(
-                params, tok, cache, jnp.asarray(t, jnp.int32))
-        prefill_s = time.time() - t0
-        # decode loop
-        generated = []
-        t0 = time.time()
-        for t in range(args.gen):
-            next_tok, logits, cache = decode(
-                params, next_tok[:, None], cache,
-                jnp.asarray(args.prompt_len + t, jnp.int32))
-            generated.append(np.asarray(next_tok))
-        jax.block_until_ready(logits)
-        decode_s = time.time() - t0
-        toks = np.stack(generated, axis=1)
-        return {
-            "prefill_s": prefill_s,
-            "decode_s": decode_s,
-            "tokens_per_s": args.gen * args.batch / max(decode_s, 1e-9),
-            "generated_shape": list(toks.shape),
-        }
+    def serve_stage(comm, upstream, control=None, resume_state=None):
+        return engine.run_service(control, resume_state=resume_state)
 
     pm = PilotManager()
-    agent = RemoteAgent(pm.submit_pilot(PilotDescription()),
-                        transport=InProcessTransport(max_workers=1))
-    task, = agent.submit([TaskDescription(name="serve", fn=serve_task,
-                                          kind="inference")])
-    if task.error:
-        raise RuntimeError(task.error)
-    res = task.result
-    res["runtime_overheads"] = task.overhead_s
-    print(f"[serve] {cfg.name}: prefill {res['prefill_s']:.2f}s, "
-          f"decode {res['tokens_per_s']:.1f} tok/s "
-          f"(batch {args.batch}); overheads {task.overhead_s}")
-    return res
+    pilot = pm.submit_pilot(PilotDescription(name="serve-pod"))
+    # the agent must OWN its transport: close() then drains the worker
+    # pool, so the service lease is back before the pilot is recycled
+    agent = RemoteAgent(pilot, max_workers=2)
+    try:
+        pipe = Pipeline("serve", [
+            Stage("engine", serve_stage, kind="inference", service=True)])
+        pipe.start(agent)
+        ctl = pipe.control("engine")
+
+        rng = np.random.default_rng(1)
+        t0 = time.time()
+        requests = [
+            ctl.submit_request(Request(
+                rng.integers(1, cfg.vocab_size, args.prompt_len),
+                max_new_tokens=args.gen))
+            for _ in range(args.batch)]
+        task = pipe.tasks["engine"]
+        deadline = time.time() + 600
+        for r in requests:
+            while not r.wait(timeout=1.0):
+                # surface an engine failure immediately instead of letting
+                # orphaned requests run the clock out
+                if task.finalized and task.error:
+                    raise RuntimeError(f"serve task failed: {task.error}")
+                if time.time() > deadline:
+                    raise RuntimeError(f"request {r.rid} did not finish")
+        wall = time.time() - t0
+        if not pipe.stop_services(drain=True, timeout=60):
+            raise RuntimeError("service stage did not drain")
+        if task.error:
+            raise RuntimeError(task.error)
+
+        stats = task.result
+        lat = sorted(r.latency_s for r in requests)
+        ttft = sorted(r.ttft_s for r in requests)
+        n_tok = sum(len(r.tokens) for r in requests)
+        res = {
+            "requests": len(requests),
+            "generated_tokens": n_tok,
+            "tokens_per_s": n_tok / max(wall, 1e-9),
+            "latency_p50_s": lat[len(lat) // 2],
+            "latency_max_s": lat[-1],
+            "ttft_p50_s": ttft[len(ttft) // 2],
+            "slot_occupancy": stats["slot_occupancy"],
+            "engine": stats,
+            "runtime_overheads": task.overhead_s,
+            "preemptions": task.preemptions,
+        }
+        print(f"[serve] {cfg.name}: {res['tokens_per_s']:.1f} tok/s over "
+              f"{len(requests)} reqs ({slots} slots, occupancy "
+              f"{res['slot_occupancy']:.2f}); p50 latency "
+              f"{res['latency_p50_s']*1e3:.0f}ms, p50 ttft "
+              f"{res['ttft_p50_s']*1e3:.0f}ms; overheads {task.overhead_s}")
+        return res
+    finally:
+        # a failed serve task must not leak the pilot's devices: close the
+        # agent (stops any still-running service, drains its worker pool)
+        # and recycle the pool
+        agent.close()
+        try:
+            pm.cancel_pilot(pilot)
+        except RuntimeError:
+            pass  # a lease is somehow still out: keep the ORIGINAL error
 
 
 def build_parser():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="number of requests to submit")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=0,
+                    help="KV-cache slots (0 = min(batch, 4))")
     return ap
 
 

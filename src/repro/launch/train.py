@@ -11,6 +11,7 @@ CLI:
       --steps 50 --batch 8 --seq 128
   ... --arch tinyllama-1.1b --steps 300        # ~100M-class full run
   ... --resume                                  # restart from checkpoint
+  ... --kind-pods                               # data vs DL kind-split pilots
 """
 from __future__ import annotations
 
@@ -53,8 +54,24 @@ def run(args) -> dict:
     ckpt_dir = args.ckpt_dir or os.path.join("results", "ckpt", cfg.name)
 
     pm = PilotManager()
-    pilot = pm.submit_pilot(PilotDescription())
-    agent = RemoteAgent(pilot, max_workers=2)
+    # kind-aware pods: split the machine into a data-engineering pod and a
+    # DL pod (PilotDescription(task_kinds=...)); stage kinds route work to
+    # the pod that admits them.  Falls back to one shared pilot when the
+    # machine cannot back two pools.
+    kind_pods = args.kind_pods and pm.free_devices() >= 2
+    if kind_pods:
+        n_data = max(1, pm.free_devices() // 4)
+        data_pilot = pm.submit_pilot(PilotDescription(
+            num_devices=n_data, name="pod-data",
+            task_kinds=("data_engineering",)))
+        dl_pilot = pm.submit_pilot(PilotDescription(
+            name="pod-dl", task_kinds=("train", "inference")))
+        data_agent = RemoteAgent(data_pilot, max_workers=2)
+        agent = RemoteAgent(dl_pilot, max_workers=2)
+    else:
+        data_agent = None
+        pilot = pm.submit_pilot(PilotDescription())
+        agent = RemoteAgent(pilot, max_workers=2)
 
     def preprocess(comm, upstream):
         corpus = make_corpus(cfg.vocab_size, args.batch * args.seq * (args.steps + 8))
@@ -110,15 +127,38 @@ def run(args) -> dict:
                 "improved": bool(last < first), "train_s": r["train_s"],
                 "steps": len(r["losses"])}
 
-    pipe = Pipeline(f"train-{cfg.name}", [
-        cylon_stage("preprocess", preprocess),
-        dl_stage("train", train, deps=("preprocess",),
-                 checkpoint_dir=ckpt_dir),
-        dl_stage("postprocess", postprocess, deps=("train",), kind="inference"),
-    ])
-    out = pipe.run(agent)
+    try:
+        if kind_pods:
+            # the data-engineering stage runs on its own pod; its table
+            # feeds the DL pipeline on the DL pod (two pilots, one manager)
+            data_pipe = Pipeline(f"data-{cfg.name}",
+                                 [cylon_stage("preprocess", preprocess)])
+            table = data_pipe.run(data_agent)["preprocess"]
+            pipe = Pipeline(f"train-{cfg.name}", [
+                dl_stage("train",
+                         lambda comm, upstream, **kw: train(
+                             comm, {"preprocess": table}, **kw),
+                         checkpoint_dir=ckpt_dir),
+                dl_stage("postprocess", postprocess, deps=("train",),
+                         kind="inference"),
+            ])
+        else:
+            pipe = Pipeline(f"train-{cfg.name}", [
+                cylon_stage("preprocess", preprocess),
+                dl_stage("train", train, deps=("preprocess",),
+                         checkpoint_dir=ckpt_dir),
+                dl_stage("postprocess", postprocess, deps=("train",),
+                         kind="inference"),
+            ])
+        out = pipe.run(agent)
+    finally:
+        agent.close()
+        if data_agent is not None:
+            data_agent.close()
     res = out["postprocess"]
     res["overheads"] = {k: v for k, v in pipe.tasks["train"].overhead_s.items()}
+    res["kind_pods"] = {p.uid: sorted(p.task_kinds) for p in pm.pilots} \
+        if kind_pods else None
     print(f"[deep-rc] {cfg.name}: loss {res['first_loss']:.4f} -> "
           f"{res['last_loss']:.4f} in {res['steps']} steps "
           f"({res['train_s']:.1f}s); runtime overheads: {res['overheads']}")
@@ -139,6 +179,9 @@ def build_parser():
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--kind-pods", action="store_true",
+                    help="split data-engineering vs DL stages onto "
+                         "kind-specialised pilots (needs >= 2 devices)")
     return ap
 
 

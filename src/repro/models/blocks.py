@@ -96,6 +96,31 @@ def apply_mrope(
 _NEG_INF = -1e30
 
 
+def _check_prefill_base(raw_len) -> None:
+    """S>1 prefill attends over the fresh K/V only, which is exact iff the
+    cache is empty — a nonzero base would silently drop the cached prefix
+    from attention.  The base must therefore be *statically* zero: pass a
+    plain Python ``0`` (a traced/data-dependent length cannot be validated
+    at trace time and is rejected)."""
+    if getattr(raw_len, "ndim", 0) != 0:
+        raise ValueError(
+            "prefill (S>1) requires a scalar cache length; per-slot "
+            "lengths only apply to single-token decode")
+    try:
+        concrete = int(raw_len)
+    except Exception as e:  # traced / data-dependent value
+        raise NotImplementedError(
+            "prefill (S>1) needs a statically-zero cache length (pass a "
+            "plain int 0): attention runs over the fresh K/V only, so "
+            "appending at a data-dependent offset would silently ignore "
+            "the cached prefix") from e
+    if concrete != 0:
+        raise NotImplementedError(
+            f"prefill (S>1) writes into an EMPTY cache (got base length "
+            f"{concrete}); chunked/multi-turn prefill over a warm cache is "
+            f"not implemented")
+
+
 def _attn_chunk(q, k, v, qpos, kpos, causal, window, scale):
     """One (q-chunk x kv-chunk) tile. q:[B,qc,H,D] k,v:[B,kc,H,D]."""
     s = jnp.einsum(
@@ -212,7 +237,10 @@ def chunked_attention(
 
 def decode_attention_ref(q, k_cache, v_cache, cache_len, *, window: int = 0):
     """Single-step decode. q: [B,1,H,D]; caches: [B,Smax,KV,D];
-    cache_len: [] int32 — number of valid positions (including current).
+    cache_len: [] or [B] int32 — number of valid positions (including
+    current).  A [B] vector gives each batch row its own valid prefix —
+    the continuous-batching slot cache, where every slot is at a
+    different point in its sequence.
 
     The cache is sequence-sharded over the model axis (flash-decoding style);
     the contraction over S becomes a partial-softmax + psum under GSPMD."""
@@ -225,9 +253,12 @@ def decode_attention_ref(q, k_cache, v_cache, cache_len, *, window: int = 0):
         "bhd,bshd->bhs", q[:, 0], kf, preferred_element_type=jnp.float32
     ) * scale
     pos = jnp.arange(kf.shape[1])
-    mask = pos[None, None, :] < cache_len
+    cl = jnp.asarray(cache_len)
+    if cl.ndim == 1:
+        cl = cl[:, None, None]  # per-row lengths broadcast over [B,H,S]
+    mask = pos[None, None, :] < cl
     if window:
-        mask &= pos[None, None, :] >= (cache_len - window)
+        mask &= pos[None, None, :] >= (cl - window)
     s = jnp.where(mask, s, _NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhs,bshd->bhd", p.astype(vf.dtype), vf)
@@ -290,17 +321,57 @@ def attn_apply(
             k = _rope_or_mrope(cfg, k, positions)
     new_cache = None
     if cache is not None and is_self:
-        # decode: append to cache (ring-buffer for windowed attention)
-        idx = cache["len"]
-        slot = idx % cache["k"].shape[1] if window else idx
-        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
-        new_cache = {"k": k_cache, "v": v_cache, "len": idx + 1}
-        if window:
-            # ring buffer of exactly `window` slots: all valid once warm
-            o = decode_attention_ref(q, k_cache, v_cache, jnp.minimum(idx + 1, k_cache.shape[1]), window=0)
+        S = k.shape[1]
+        slots_n = cache["k"].shape[1]
+        if S > 1:
+            # batched prefill: write the whole prompt's K/V into the cache
+            # in one shot and run the causal flash pass over the fresh
+            # K/V (exact because the cache is statically empty — enforced
+            # BEFORE any array conversion, on the raw python length)
+            _check_prefill_base(cache["len"])
+            if window and S >= slots_n:
+                # ring cache: only the last `slots_n` positions survive,
+                # each at its position-mod-size slot
+                keep_k = k[:, S - slots_n:]
+                keep_v = v[:, S - slots_n:]
+                ring = (S - slots_n + jnp.arange(slots_n)) % slots_n
+                k_cache = cache["k"].at[:, ring].set(keep_k.astype(cache["k"].dtype))
+                v_cache = cache["v"].at[:, ring].set(keep_v.astype(cache["v"].dtype))
+            else:
+                k_cache = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+                v_cache = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+            new_cache = {"k": k_cache, "v": v_cache, "len": S}
+            o = chunked_attention(
+                q, k, v, causal=True, window=window,
+                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+            )
+        elif jnp.asarray(cache["len"]).ndim == 1:
+            # per-slot decode (continuous batching): each row appends at
+            # its own length; rows past capacity are dropped, not wrapped
+            idx = jnp.asarray(cache["len"])
+            rows = jnp.arange(k.shape[0])
+            slot = idx % slots_n if window else idx
+            k_cache = cache["k"].at[rows, slot].set(
+                k[:, 0].astype(cache["k"].dtype), mode="drop")
+            v_cache = cache["v"].at[rows, slot].set(
+                v[:, 0].astype(cache["v"].dtype), mode="drop")
+            new_cache = {"k": k_cache, "v": v_cache, "len": idx + 1}
+            lens = jnp.minimum(idx + 1, slots_n) if window else idx + 1
+            o = decode_attention_ref(q, k_cache, v_cache, lens, window=0)
         else:
-            o = decode_attention_ref(q, k_cache, v_cache, idx + 1, window=0)
+            # decode: append to cache (ring-buffer for windowed attention)
+            idx = cache["len"]
+            slot = idx % slots_n if window else idx
+            k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+            new_cache = {"k": k_cache, "v": v_cache, "len": idx + 1}
+            if window:
+                # ring buffer of exactly `window` slots: all valid once warm
+                o = decode_attention_ref(q, k_cache, v_cache, jnp.minimum(idx + 1, k_cache.shape[1]), window=0)
+            else:
+                o = decode_attention_ref(q, k_cache, v_cache, idx + 1, window=0)
     elif cache is not None and not is_self:
         o = decode_attention_ref(q, cache["xk"], cache["xv"], cache["xlen"], window=0)
         new_cache = cache
@@ -369,10 +440,28 @@ def mla_apply(
     k_pe = apply_rope(k_pe[:, :, None, :], positions if positions.ndim == 2 else positions[..., 0], cfg.rope_theta)  # [B,S,1,rd]
 
     new_cache = None
-    if cache is not None:
-        idx = cache["len"]
-        ckv_c = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), idx, axis=1)
-        kpe_c = jax.lax.dynamic_update_slice_in_dim(cache["k_pe"], k_pe[:, :, 0, :].astype(cache["k_pe"].dtype), idx, axis=1)
+    if cache is not None and S > 1:
+        # batched prefill: write the latent K/V for the whole prompt, then
+        # run the full-attention pass over the fresh latents (exact
+        # because the cache is statically empty — enforced BEFORE any
+        # array conversion, on the raw python length)
+        _check_prefill_base(cache["len"])
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), 0, axis=1)
+        kpe_c = jax.lax.dynamic_update_slice_in_dim(cache["k_pe"], k_pe[:, :, 0, :].astype(cache["k_pe"].dtype), 0, axis=1)
+        new_cache = {"c_kv": ckv_c, "k_pe": kpe_c, "len": S}
+        o = _mla_full_attention(cfg, params, q_nope, q_pe, c_kv, k_pe, cdt)
+    elif cache is not None:
+        idx = jnp.asarray(cache["len"])
+        if idx.ndim == 1:
+            # per-slot decode (continuous batching): row-wise append
+            rows = jnp.arange(B)
+            ckv_c = cache["c_kv"].at[rows, idx].set(
+                c_kv[:, 0].astype(cache["c_kv"].dtype), mode="drop")
+            kpe_c = cache["k_pe"].at[rows, idx].set(
+                k_pe[:, 0, 0, :].astype(cache["k_pe"].dtype), mode="drop")
+        else:
+            ckv_c = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), idx, axis=1)
+            kpe_c = jax.lax.dynamic_update_slice_in_dim(cache["k_pe"], k_pe[:, :, 0, :].astype(cache["k_pe"].dtype), idx, axis=1)
         new_cache = {"c_kv": ckv_c, "k_pe": kpe_c, "len": idx + 1}
         # naive (baseline) decode: expand latents to full K/V then attend.
         k_nope = jnp.einsum("bsr,rhk->bshk", ckv_c.astype(cdt), params["wk_b"].astype(cdt))
@@ -383,28 +472,37 @@ def mla_apply(
             + jnp.einsum("bhk,bsk->bhs", q_pe[:, 0].astype(jnp.float32), kpe_c.astype(jnp.float32))
         ) * scale
         pos = jnp.arange(ckv_c.shape[1])
-        s = jnp.where(pos[None, None, :] < idx + 1, s, _NEG_INF)
+        cl = (idx + 1)[:, None, None] if idx.ndim == 1 else idx + 1
+        s = jnp.where(pos[None, None, :] < cl, s, _NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
         o = jnp.einsum("bhs,bshk->bhk", p.astype(cdt), v_full)[:, None]
     else:
-        k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["wk_b"].astype(cdt))
-        v_full = jnp.einsum("bsr,rhk->bshk", c_kv, params["wv_b"].astype(cdt))
-        k_full = jnp.concatenate(
-            [k_nope, jnp.broadcast_to(k_pe, (B, S, H, rd)).astype(k_nope.dtype)], axis=-1
-        )
-        q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
-        # pad v to qk head dim for the shared chunked kernel, then trim
-        if vd < nd + rd:
-            v_pad = jnp.pad(v_full, ((0, 0), (0, 0), (0, 0), (0, nd + rd - vd)))
-        else:
-            v_pad = v_full
-        o = chunked_attention(
-            q_full, k_full, v_pad, causal=True,
-            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
-        )[..., :vd]
+        o = _mla_full_attention(cfg, params, q_nope, q_pe, c_kv, k_pe, cdt)
     y = jnp.einsum("bshk,hkd->bsd", o.astype(cdt), params["wo"].astype(cdt))
     y = _checkpoint_name(y, "block_out")
     return x + y.astype(x.dtype), new_cache
+
+
+def _mla_full_attention(cfg, params, q_nope, q_pe, c_kv, k_pe, cdt):
+    """Full causal MLA pass over in-flight latents (training forward and
+    the batched-prefill cache write share this)."""
+    B, S, H, _ = q_nope.shape
+    nd, rd, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["wk_b"].astype(cdt))
+    v_full = jnp.einsum("bsr,rhk->bshk", c_kv, params["wv_b"].astype(cdt))
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe, (B, S, H, rd)).astype(k_nope.dtype)], axis=-1
+    )
+    q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+    # pad v to qk head dim for the shared chunked kernel, then trim
+    if vd < nd + rd:
+        v_pad = jnp.pad(v_full, ((0, 0), (0, 0), (0, 0), (0, nd + rd - vd)))
+    else:
+        v_pad = v_full
+    return chunked_attention(
+        q_full, k_full, v_pad, causal=True,
+        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+    )[..., :vd]
 
 
 # ---------------------------------------------------------------------------

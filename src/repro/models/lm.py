@@ -234,7 +234,10 @@ def lm_apply(
     """Returns (logits, new_cache, aux_loss).
 
     inputs: int tokens [B,S] or embeds [B,S,d] (vlm/audio frontends).
-    cache/cache_len: decode mode (S==1).
+    cache/cache_len: decode mode (S==1) or batched prefill (S>1 with a
+    scalar cache_len — the full-sequence K/V is written into the cache in
+    one forward).  A [B]-vector cache_len runs per-slot decode: every row
+    appends and attends at its own length (continuous batching).
     """
     head, unit, reps, tail = block_pattern(cfg)
     if inputs.ndim == 2:
@@ -244,7 +247,11 @@ def lm_apply(
     Bsz, S = x.shape[0], x.shape[1]
     if positions is None:
         if cache_len is not None:
-            positions = jnp.broadcast_to(cache_len[None, None], (Bsz, 1)).astype(jnp.int32)
+            cl = jnp.asarray(cache_len)
+            if cl.ndim == 1:  # per-slot lengths: each row decodes at its own position
+                positions = cl[:, None].astype(jnp.int32)
+            else:
+                positions = jnp.broadcast_to(cl[None, None], (Bsz, 1)).astype(jnp.int32)
         else:
             positions = jnp.broadcast_to(jnp.arange(S)[None, :], (Bsz, S)).astype(jnp.int32)
 

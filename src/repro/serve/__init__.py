@@ -1,0 +1,12 @@
+"""Continuous-batching serving subsystem (slot-based KV cache engine).
+
+``ServeEngine`` + ``Request`` implement the paper's inference task kind as
+a long-running *service* on the pilot runtime: batched prefill into a
+``[max_slots, max_len]`` cache, one fused decode per step over all
+occupied slots, admission between steps, and checkpoint/yield/resume
+under priority preemption (see ``core/task.py`` ServiceControl).
+"""
+from repro.serve.engine import ServeEngine
+from repro.serve.request import Request, RequestState
+
+__all__ = ["ServeEngine", "Request", "RequestState"]

@@ -1,0 +1,381 @@
+"""ServeEngine: continuous-batching inference over a slot-based KV cache.
+
+The engine owns a fixed ``[max_slots, max_len]`` KV cache (one row per
+in-flight sequence).  Admission is *continuous*: whenever a slot is free
+and a request is queued, the request is prefilled — ONE jitted
+full-sequence causal forward (``make_prefill_step(with_cache=True)``),
+not a token-by-token replay — and its cache rows are packed into the free
+slots *between* decode steps.  ``step()`` then runs one fused decode over
+all occupied slots: every row appends and attends at its own length
+(per-slot vector cache lengths, see ``models/blocks.py``), finished
+sequences free their slot, and freed slots are refilled on the next step.
+A static-batch baseline (``continuous=False``: admit only when every slot
+is free) exists for the serving benchmark's comparison.
+
+The engine is also a *service task body* for the pilot runtime
+(``run_service``): driven through a :class:`~repro.core.task.ServiceControl`,
+it pulls requests from the control inbox, and cooperates with priority
+preemption — when the agent requests preemption it checkpoints its slot
+state (cache, lengths, bound requests, queue), releases everything, and
+raises :class:`~repro.core.task.ServicePreempted`; the agent re-queues the
+task and the next attempt restores from the checkpoint and keeps serving.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Any, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.params import init_params, is_param
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core.task import ServiceControl, ServicePreempted
+from repro.models.lm import lm_cache_specs
+from repro.serve.request import Request, RequestState
+from repro.train.state import model_specs
+from repro.train.step import make_decode_step, make_prefill_step
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    """Next power-of-two >= n (floored at ``lo``) — bounds jit retraces."""
+    p = lo
+    while p < n:
+        p *= 2
+    return p
+
+
+def _map_cache(fn_b0, fn_b1, *trees):
+    """Map over LM cache trees, batch-axis aware: ``head_layers`` /
+    ``tail_layers`` leaves are ``[batch, ...]`` (``fn_b0``) while the
+    scanned ``unit`` leaves are ``[layers, batch, ...]`` (``fn_b1``)."""
+    out = {k: jax.tree.map(fn_b0, *(t[k] for t in trees))
+           for k in ("head_layers", "tail_layers") if k in trees[0]}
+    if "unit" in trees[0]:
+        out["unit"] = jax.tree.map(fn_b1, *(t["unit"] for t in trees))
+    return out
+
+
+class ServeEngine:
+    """Slot-based continuous-batching engine for token-LM archs.
+
+    Drive it either directly (``submit`` + ``step``/``run_until_drained``,
+    the benchmark/test mode) or as a service stage under the pilot runtime
+    (``run_service(control=...)``).
+    """
+
+    def __init__(self, cfg: ModelConfig, run_cfg: Optional[RunConfig] = None,
+                 *, max_slots: int = 4, max_len: int = 128,
+                 params: Any = None, seed: int = 0,
+                 continuous: bool = True, idle_wait_s: float = 0.005):
+        if cfg.is_encoder_decoder or cfg.input_kind != "tokens":
+            raise NotImplementedError("ServeEngine targets token-LM archs")
+        if cfg.mrope_sections:
+            raise NotImplementedError(
+                "M-RoPE position streams are not supported by the slot cache")
+        if max_slots < 1 or max_len < 2:
+            raise ValueError("need max_slots >= 1 and max_len >= 2")
+        self.cfg = cfg
+        self.run_cfg = run_cfg or RunConfig()
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.continuous = continuous
+        self.idle_wait_s = idle_wait_s
+        self.params = (params if params is not None
+                       else init_params(jax.random.PRNGKey(seed),
+                                        model_specs(cfg)))
+        # raises at construction for unsupported archs (recurrent caches)
+        self._prefill = jax.jit(make_prefill_step(
+            cfg, self.run_cfg, with_cache=True, max_len=max_len))
+        decode = make_decode_step(cfg, self.run_cfg)
+
+        def _step(params, tokens, cache, lengths, active):
+            next_tok, _, new_cache = decode(params, tokens[:, None], cache,
+                                            lengths)
+            # freeze unoccupied slots: restore their cache rows so junk
+            # writes never accumulate (also what keeps recurrent-style
+            # state caches correct if they ever land here)
+            def keep_b0(new, old):
+                a = active.reshape((-1,) + (1,) * (new.ndim - 1))
+                return jnp.where(a, new, old)
+
+            def keep_b1(new, old):  # scanned unit: [layers, batch, ...]
+                a = active.reshape((1, -1) + (1,) * (new.ndim - 2))
+                return jnp.where(a, new, old)
+
+            return (jnp.where(active, next_tok, 0),
+                    _map_cache(keep_b0, keep_b1, new_cache, cache))
+
+        self._decode = jax.jit(_step, donate_argnums=(2,))
+
+        def _pack(cache, rows, slot_idx):
+            # copy freshly prefilled cache rows into their slots
+            def set_b0(big, small):
+                return big.at[slot_idx].set(small.astype(big.dtype),
+                                            mode="drop")
+
+            def set_b1(big, small):  # scanned unit: [layers, batch, ...]
+                return big.at[:, slot_idx].set(small.astype(big.dtype),
+                                               mode="drop")
+
+            return _map_cache(set_b0, set_b1, cache, rows)
+
+        self._pack = jax.jit(_pack, donate_argnums=(0,))
+
+        self._lock = threading.Lock()
+        self.queue: Deque[Request] = collections.deque()
+        self.cache = None
+        self.lengths = np.zeros(max_slots, np.int32)
+        self.last_tok = np.zeros(max_slots, np.int32)
+        self.slots: List[Optional[Request]] = [None] * max_slots
+        self._stats: Dict[str, int] = collections.defaultdict(int)
+        self._init_state()
+
+    # -- state lifecycle -----------------------------------------------------
+
+    def _init_state(self) -> None:
+        specs = lm_cache_specs(self.cfg, self.max_slots, self.max_len)
+        self.cache = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype),
+                                  specs, is_leaf=is_param)
+        self.lengths = np.zeros(self.max_slots, np.int32)
+        self.last_tok = np.zeros(self.max_slots, np.int32)
+        self.slots = [None] * self.max_slots
+
+    def checkpoint(self) -> Dict[str, Any]:
+        """Snapshot the full serving state (slot cache, per-slot lengths,
+        bound requests, queued requests).  Cache arrays are copied so the
+        snapshot survives later donated decode steps."""
+        with self._lock:
+            return {
+                "cache": jax.tree.map(jnp.copy, self.cache),
+                "lengths": self.lengths.copy(),
+                "last_tok": self.last_tok.copy(),
+                "slots": list(self.slots),
+                "queue": list(self.queue),
+                "stats": dict(self._stats),
+            }
+
+    def restore(self, state: Dict[str, Any]) -> None:
+        with self._lock:
+            # copy: the live cache is donated by decode/pack, and ``state``
+            # may be the agent's stashed resume_state which a later retry
+            # re-uses — aliasing it here would hand that retry deleted
+            # buffers
+            self.cache = jax.tree.map(jnp.copy, state["cache"])
+            self.lengths = state["lengths"].copy()
+            self.last_tok = state["last_tok"].copy()
+            self.slots = list(state["slots"])
+            self.queue = collections.deque(state["queue"])
+            self._stats = collections.defaultdict(int, state["stats"])
+
+    def _release_state(self) -> None:
+        """Drop the live slot state (after checkpointing): the preempted
+        engine holds no cache while higher-priority work runs."""
+        with self._lock:
+            self.cache = None
+            self.slots = [None] * self.max_slots
+            self.lengths = np.zeros(self.max_slots, np.int32)
+            self.last_tok = np.zeros(self.max_slots, np.int32)
+            self.queue = collections.deque()
+
+    # -- client side ---------------------------------------------------------
+
+    def submit(self, request, **kw) -> Request:
+        """Queue a request (a :class:`Request` or a raw prompt array)."""
+        if not isinstance(request, Request):
+            request = Request(np.asarray(request, np.int32), **kw)
+        with self._lock:
+            self.queue.append(request)
+        return request
+
+    def has_work(self) -> bool:
+        with self._lock:
+            return bool(self.queue) or any(r is not None for r in self.slots)
+
+    def occupancy(self) -> int:
+        return sum(r is not None for r in self.slots)
+
+    # -- engine core ---------------------------------------------------------
+
+    def _finish_slot(self, i: int, state: RequestState,
+                     error: Optional[str] = None) -> None:
+        req = self.slots[i]
+        self.slots[i] = None
+        self.lengths[i] = 0
+        self.last_tok[i] = 0
+        req._finish(state, error)
+        self._stats["completed" if state is RequestState.DONE else "failed"] += 1
+
+    def _fail_outstanding(self, error: str) -> None:
+        """Terminate every accepted-but-unfinished request (hard stop):
+        waiters block on Request.wait(), so abandoning them silently would
+        hang clients forever."""
+        for i, req in enumerate(self.slots):
+            if req is not None:
+                self._finish_slot(i, RequestState.FAILED, error)
+        with self._lock:
+            queued, self.queue = list(self.queue), collections.deque()
+        for req in queued:
+            req._finish(RequestState.FAILED, error)
+            self._stats["failed"] += 1
+
+    def _should_stop(self, req: Request, tok: int, length: int) -> bool:
+        return (len(req.tokens) >= req.max_new_tokens
+                or (req.stop_token is not None and tok == req.stop_token)
+                or length >= self.max_len)
+
+    def _admit(self) -> int:
+        """Pack queued requests into free slots via batched prefill.
+        Returns the number admitted this call."""
+        free = [i for i, r in enumerate(self.slots) if r is None]
+        with self._lock:
+            if not free or not self.queue:
+                return 0
+            if not self.continuous and len(free) < self.max_slots:
+                return 0  # static batching: wait for the whole batch to end
+            batch: List[Request] = []
+            while self.queue and len(batch) < len(free):
+                req = self.queue.popleft()
+                if req.prompt_len > self.max_len - 1:
+                    req._finish(RequestState.FAILED,
+                                f"prompt ({req.prompt_len} tokens) does not "
+                                f"fit max_len={self.max_len}")
+                    self._stats["failed"] += 1
+                    continue
+                batch.append(req)
+        if not batch:
+            return 0
+        nb = len(batch)
+        # bucket both prefill dims to powers of two so jit retraces stay
+        # bounded; padding rows carry slot index max_slots, which the
+        # drop-mode pack discards
+        nbp = _bucket(nb, lo=1)
+        P = min(_bucket(max(r.prompt_len for r in batch)), self.max_len)
+        tokens = np.zeros((nbp, P), np.int32)
+        lens = np.zeros(nbp, np.int32)
+        slot_idx = np.full(nbp, self.max_slots, np.int32)
+        for j, req in enumerate(batch):
+            tokens[j, :req.prompt_len] = req.prompt
+            lens[j] = req.prompt_len
+            slot_idx[j] = free[j]
+        next_tok, _, rows = self._prefill(
+            self.params, jnp.asarray(tokens), jnp.asarray(lens))
+        self.cache = self._pack(self.cache, rows, jnp.asarray(slot_idx))
+        toks = np.asarray(next_tok)
+        now = time.time()
+        for j, req in enumerate(batch):
+            i = free[j]
+            self.slots[i] = req
+            self.lengths[i] = req.prompt_len
+            req.state = RequestState.RUNNING
+            req.admitted_at = now
+            req.first_token_at = now
+            tok = int(toks[j])
+            req.tokens.append(tok)
+            self.last_tok[i] = tok
+            if self._should_stop(req, tok, int(self.lengths[i])):
+                self._finish_slot(i, RequestState.DONE)
+        self._stats["admitted"] += nb
+        self._stats["prefill_batches"] += 1
+        self._stats["prefill_tokens"] += int(lens.sum())
+        return nb
+
+    def step(self) -> bool:
+        """Admit what fits, then run one fused decode over every occupied
+        slot.  Returns False when there was nothing to do."""
+        progressed = self._admit() > 0
+        active = np.array([r is not None for r in self.slots])
+        if not active.any():
+            return progressed
+        next_tok, self.cache = self._decode(
+            self.params, jnp.asarray(self.last_tok), self.cache,
+            jnp.asarray(self.lengths), jnp.asarray(active))
+        toks = np.asarray(next_tok)
+        self.lengths = self.lengths + active.astype(np.int32)
+        self._stats["decode_steps"] += 1
+        self._stats["decode_slot_steps"] += int(active.sum())
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(toks[i])
+            req.tokens.append(tok)
+            self.last_tok[i] = tok
+            self._stats["tokens_generated"] += 1
+            if self._should_stop(req, tok, int(self.lengths[i])):
+                self._finish_slot(i, RequestState.DONE)
+        return True
+
+    def run_until_drained(self, max_steps: int = 100_000) -> None:
+        """Synchronous drive: step until queue and slots are empty."""
+        steps = 0
+        while self.has_work():
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError(f"engine did not drain in {max_steps} steps")
+
+    # -- service-stage body --------------------------------------------------
+
+    def run_service(self, control: Optional[ServiceControl] = None,
+                    resume_state: Any = None) -> Dict[str, Any]:
+        """Long-running service loop (the body of a ``service=True`` stage).
+
+        Pulls requests from the control inbox, steps the engine, and
+        cooperates with the runtime: ``stop()`` exits immediately,
+        ``drain()`` exits once every accepted request finished, and a
+        preemption request checkpoints + yields via ServicePreempted.
+        """
+        if resume_state is not None:
+            self.restore(resume_state)
+            self._stats["resumes"] += 1
+        if self.cache is None:
+            self._init_state()
+        while True:
+            if control is not None:
+                for req in control.take_requests():
+                    self.submit(req)
+                if control.stop_requested():
+                    # hard stop: sweep any request that raced in after the
+                    # take above, then fail everything outstanding so
+                    # Request.wait() callers are released, not hung
+                    for req in control.take_requests():
+                        self.submit(req)
+                    self._fail_outstanding("service stopped before completion")
+                    break
+                if control.preempt_requested():
+                    self._stats["preemptions"] += 1  # before the snapshot
+                    # so the count survives restore()
+                    state = self.checkpoint()
+                    self._release_state()
+                    raise ServicePreempted(state)
+            if not self.step():
+                if control is None:
+                    break
+                if (control.drain_requested()
+                        and control.pending_requests() == 0):
+                    break
+                control.wait_for_work(self.idle_wait_s)
+        return self.stats()
+
+    # -- reporting -----------------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        out = dict(self._stats)
+        out.update({
+            "max_slots": self.max_slots,
+            "max_len": self.max_len,
+            "continuous": self.continuous,
+            "queued": len(self.queue),
+            "occupied": self.occupancy(),
+        })
+        d = out.get("decode_steps", 0)
+        out["slot_occupancy"] = (
+            out.get("decode_slot_steps", 0) / (d * self.max_slots)
+            if d else 0.0)
+        return out
+
+    def reset_stats(self) -> None:
+        self._stats = collections.defaultdict(int)

@@ -1,0 +1,88 @@
+"""Serving requests: what a client submits to the ServeEngine.
+
+A request is a prompt plus generation limits; the engine fills in the
+lifecycle (QUEUED -> RUNNING -> DONE/FAILED), the generated tokens, and
+the latency timestamps the serving benchmark reports (time-to-first-token
+and end-to-end latency).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+import threading
+import time
+from typing import List, Optional
+
+import numpy as np
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"   # occupying a slot
+    DONE = "done"
+    FAILED = "failed"
+
+
+_rid = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``prompt`` is a 1-D int32 token array; generation is greedy and stops
+    at ``max_new_tokens``, on ``stop_token``, or when the slot's KV cache
+    is full — whichever comes first.
+    """
+
+    prompt: np.ndarray
+    max_new_tokens: int = 16
+    stop_token: Optional[int] = None
+    rid: str = dataclasses.field(
+        default_factory=lambda: f"req.{next(_rid):06d}")
+    state: RequestState = RequestState.QUEUED
+    tokens: List[int] = dataclasses.field(default_factory=list)  # generated
+    error: Optional[str] = None
+    # lifecycle timestamps (benchmark latency decomposition)
+    submitted_at: float = dataclasses.field(default_factory=time.time)
+    admitted_at: Optional[float] = None
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    _finished: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False, compare=False)
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size == 0:
+            raise ValueError("empty prompt")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Time to first token (queueing + prefill)."""
+        if self.first_token_at is None:
+            return None
+        return self.first_token_at - self.submitted_at
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.submitted_at
+
+    def done(self) -> bool:
+        return self.state in (RequestState.DONE, RequestState.FAILED)
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until the request reaches a terminal state."""
+        return self._finished.wait(timeout)
+
+    def _finish(self, state: RequestState, error: Optional[str] = None) -> None:
+        self.state = state
+        self.error = error
+        self.finished_at = time.time()
+        self._finished.set()

@@ -3,8 +3,10 @@
 ``make_train_step`` builds the jit-able update: microbatched grad
 accumulation (lax.scan), fp32 loss, global-norm clipping, AdamW/Adafactor,
 optional int8 gradient compression on the DP all-reduce
-(distributed/collectives.py).  ``make_serve_step`` builds prefill and
-single-token decode steps (the decode step also greedy-samples).
+(distributed/collectives.py).  ``make_prefill_step`` / ``make_decode_step``
+build the serving steps: batched prefill (optionally writing the KV cache
+in one full-sequence forward) and single-token decode (which also
+greedy-samples; accepts per-slot cache lengths for continuous batching).
 """
 from __future__ import annotations
 
@@ -114,10 +116,68 @@ def make_train_step(cfg: ModelConfig, run_cfg: RunConfig):
     return train_step
 
 
-def make_prefill_step(cfg: ModelConfig, run_cfg: Optional[RunConfig] = None):
-    """Prefill returns the last-position logits (what a serving system
+def make_prefill_step(cfg: ModelConfig, run_cfg: Optional[RunConfig] = None,
+                      *, with_cache: bool = False, max_len: Optional[int] = None):
+    """Prefill step factory.
+
+    Default mode returns the last-position logits (what a serving system
     samples from) — returning the full [B,S,V] tensor would materialize
-    hundreds of GB at 32k x 100k-vocab."""
+    hundreds of GB at 32k x 100k-vocab.
+
+    ``with_cache=True`` builds the serving prefill: ONE jitted full-sequence
+    causal forward (the flash/chunked pass, not a token-replay loop) that
+    also writes the prompt's K/V into a fresh ``[B, max_len]`` cache.
+    ``prefill_step(params, tokens, lengths)`` takes right-padded prompts
+    ``tokens [B,P]`` with true lengths ``lengths [B]`` and returns
+    ``(next_token [B], last_logits [B,V], cache)`` where ``last_logits`` is
+    read at each row's final *valid* position.  Positions past a row's
+    length hold junk K/V but sit beyond that row's cache length, so they
+    are masked in every subsequent decode and overwritten as the row
+    generates.  Token-LM archs with attention-family temporal blocks only
+    (recurrent state caches need a step-scan prefill).
+    """
+    if with_cache:
+        if cfg.is_encoder_decoder or cfg.input_kind != "tokens":
+            raise NotImplementedError(
+                "cache-writing prefill targets token-LM archs")
+        if max_len is None:
+            raise ValueError("with_cache=True requires max_len")
+        from repro.configs.base import block_pattern
+        from repro.models.lm import lm_cache_specs
+        from repro.common.params import is_param
+
+        head, unit, _, tail = block_pattern(cfg)
+        kinds = {tk for tk, _ in (*head, *unit, *tail)}
+        if not kinds <= {"attn", "mla"}:
+            # 'local' is excluded: the windowed ring cache keeps the last
+            # positions of the PADDED sequence, so right-padding junk from
+            # shorter rows would land inside the attention window where
+            # the per-slot length mask cannot exclude it
+            raise NotImplementedError(
+                f"cache-writing prefill supports full-attention blocks "
+                f"only, got {sorted(kinds)} (recurrent state caches need a "
+                f"step-scan prefill; windowed ring caches need per-row "
+                f"length-aware writes)")
+
+        def prefill_step(params, tokens: jnp.ndarray, lengths: jnp.ndarray):
+            B, P = tokens.shape
+            specs = lm_cache_specs(cfg, B, max_len)
+            cache = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype),
+                                 specs, is_leaf=is_param)
+            positions = jnp.broadcast_to(
+                jnp.arange(P)[None, :], (B, P)).astype(jnp.int32)
+            # cache_len is a plain 0: the prefill contract requires a
+            # STATICALLY empty cache (blocks._check_prefill_base)
+            logits, new_cache, _ = lm_apply(
+                cfg, params, tokens, positions, cache, 0, remat=False)
+            last = jnp.take_along_axis(
+                logits, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1
+            )[:, 0]
+            last = constrain(last, ("act_batch", "act_vocab"))
+            next_token = jnp.argmax(last, axis=-1).astype(jnp.int32)
+            return next_token, last, new_cache
+
+        return prefill_step
 
     def prefill_step(params, batch: Dict) -> jnp.ndarray:
         if cfg.is_encoder_decoder:
