@@ -47,19 +47,21 @@ RESULTS_JSON = os.path.join(
     "results", "bench", "multi_pipeline.json")
 
 
-def _build_pipelines(n: int, rows: int):
-    """N two-stage (join -> infer) pipelines with CPU-bound stage bodies."""
-    from repro.core.bridge import cylon_stage, dl_stage
-    from repro.core.pipeline import Pipeline
+def _build_pipelines(n: int, rows: int, quota=None):
+    """N two-stage (join -> infer) stage graphs with CPU-bound bodies,
+    compiled to named pipelines through the Session DSL."""
+    from repro.core import stage
 
-    def join_fn(comm, upstream, seed):
+    @stage(kind="data_engineering", name="join")
+    def join_fn(ctx, seed):
         rng = np.random.default_rng(seed)
         k = rng.integers(0, rows, rows).astype(np.int32)
         v = rng.normal(size=rows).astype(np.float32)
         order = np.argsort(k, kind="stable")
         return float(np.sum(v[order] * np.arange(rows)))
 
-    def infer_fn(comm, upstream, seed):
+    @stage(kind="inference", name="infer")
+    def infer_fn(ctx, seed):
         x = jnp.asarray(
             np.random.default_rng(seed).normal(size=(256, 128)),
             jnp.float32)
@@ -69,34 +71,28 @@ def _build_pipelines(n: int, rows: int):
         acc = 0.0
         for _ in range(40):
             acc += float(f(x))
-        return acc + upstream["join"]
+        return acc + ctx.upstream["join"]
 
-    pipes = []
-    for i in range(n):
-        pipes.append(Pipeline(f"pipe{i}", [
-            cylon_stage("join", lambda c, u, s=i: join_fn(c, u, s)),
-            dl_stage("infer", lambda c, u, s=i: infer_fn(c, u, s),
-                     deps=("join",), kind="inference"),
-        ]))
-    return pipes
+    return [
+        (join_fn.bind(i) >> infer_fn.bind(i)).compile(f"pipe{i}", quota=quota)
+        for i in range(n)
+    ]
 
 
 def _build_wide_pipeline(n_stages: int, rows: int, quota: int):
     """A greedy pipeline: n_stages independent 1-device stages that would
     grab every free device at once — quota-capped so siblings keep their
     share (the Table-4 fairness scenario)."""
-    from repro.core.bridge import cylon_stage
-    from repro.core.pipeline import Pipeline
+    from repro.core import StageGraph, stage
 
-    def chew(comm, upstream, seed):
+    @stage(kind="data_engineering")
+    def chew(ctx, seed):
         rng = np.random.default_rng(seed)
         k = rng.integers(0, rows, rows).astype(np.int32)
         return float(np.sort(k, kind="stable")[-1])
 
-    return Pipeline("wide", [
-        cylon_stage(f"chew{i}", lambda c, u, s=i: chew(c, u, s))
-        for i in range(n_stages)
-    ], quota=quota)
+    return StageGraph([chew.named(f"chew{i}").bind(i)
+                       for i in range(n_stages)]).compile("wide", quota=quota)
 
 
 def _record(update: dict) -> None:
@@ -119,30 +115,27 @@ def bench_concurrent_pipelines(full: bool = False,
     standalone script with an emulated 4-device pool and parse its CSV —
     never publish a 1-device "overlap" datapoint.
     """
-    from repro.core.pilot import PilotDescription, PilotManager
-    from repro.core.pipeline import run_pipelines
+    from repro.core import Session
 
     if len(jax.devices()) < 2:
         return _rows_from_subprocess(full, quick)
 
     n = 4 if quick else (8 if full else 6)
     rows = 60_000 if quick else (400_000 if full else 150_000)
-    pm = PilotManager()
-    pilot = pm.submit_pilot(PilotDescription())
-    n_dev = pilot.size
+    n_dev = len(jax.devices())
 
     out_rows: List[Tuple] = []
     if not quick:  # scenario 1 dominates runtime; the CI smoke skips it
-        t0 = time.time()
-        for p in _build_pipelines(n, rows):
-            run_pipelines([p], pilot=pilot, max_workers=max(n_dev, 2))
-        serial_s = time.time() - t0
+        with Session(max_workers_per_pilot=max(n_dev, 2)) as session:
+            t0 = time.time()
+            for p in _build_pipelines(n, rows):
+                session.run_all([p])
+            serial_s = time.time() - t0
 
-        t0 = time.time()
-        out = run_pipelines(_build_pipelines(n, rows), pilot=pilot,
-                            max_workers=max(n_dev, 2))
-        concurrent_s = time.time() - t0
-        meta = out["_meta"]
+            t0 = time.time()
+            out = session.run_all(_build_pipelines(n, rows))
+            concurrent_s = time.time() - t0
+            meta = out["_meta"]
 
         speedup = serial_s / concurrent_s if concurrent_s > 0 else float("inf")
         out_rows += [
@@ -158,60 +151,61 @@ def bench_concurrent_pipelines(full: bool = False,
 
 
 def bench_multi_pilot(n: int, rows: int, n_dev: int) -> List[Tuple]:
-    """Scenario 2: single-pod baseline (one pilot over half the machine,
-    N pipelines — all a single pilot can hold) vs the placement layer
-    spreading 2N pipelines + a quota-capped greedy pipeline over two
-    disjoint pods covering the whole machine.  Records both overlap
-    factors into results/bench/multi_pipeline.json."""
-    from repro.core.pilot import PilotDescription, PilotManager
-    from repro.core.pipeline import run_pipelines, run_pipelines_multi
+    """Scenario 2: single-pod baseline (one pod over half the machine,
+    N pipelines — all a single pod can hold) vs a 2-pod Session spreading
+    2N pipelines + a quota-capped greedy pipeline over two disjoint pods
+    covering the whole machine, each STAGE placed by the Session's
+    placement policy.  Records both overlap factors into
+    results/bench/multi_pipeline.json."""
+    from repro.core import Session
+    from repro.core.pilot import PilotDescription
 
     quota = 1
     pod = max(n_dev // 2, 1)
     wide_stages = max(pod, 4)
 
-    # single-pilot baseline (PR 1 mode): one pod, N pipelines, each
+    # single-pod baseline (PR 1 mode): one pod, N pipelines, each
     # quota-capped at its natural 1-device width so the cap is enforced
     # (and auditable) in this mode too
-    pm1 = PilotManager()
-    baseline_pipes = _build_pipelines(n, rows)
-    for p in baseline_pipes:
-        p.quota = quota
     t0 = time.time()
-    single = run_pipelines(
-        baseline_pipes,
-        pilot=pm1.submit_pilot(PilotDescription(num_devices=pod)),
-        max_workers=max(pod, 2))
+    with Session(pods=[PilotDescription(num_devices=pod, name="solo")],
+                 max_workers_per_pilot=max(pod, 2)) as s1:
+        single = s1.run_all(_build_pipelines(n, rows, quota=quota))
     single_wall = time.time() - t0
     single_overlap = single["_meta"]["overlap_factor"]
 
-    # multi-pilot: two disjoint per-pod pools, 2N + 1 pipelines placed by
-    # the PilotManager (the workload a single pilot cannot span)
-    pm2 = PilotManager()
-    multi_pipes = _build_pipelines(2 * n, rows)
-    for p in multi_pipes:
-        p.quota = quota
+    # multi-pilot: two disjoint per-pod pools, 2N + 1 pipelines whose
+    # stages the Session places individually (the workload a single pod
+    # cannot span)
+    multi_pipes = _build_pipelines(2 * n, rows, quota=quota)
     multi_pipes.append(_build_wide_pipeline(wide_stages, rows, quota))
     t0 = time.time()
-    multi = run_pipelines_multi(multi_pipes, manager=pm2, num_pilots=2)
+    with Session(pods=2) as s2:
+        multi = s2.run_all(multi_pipes)
+        pilots2 = s2.pilots
     multi_wall = time.time() - t0
     mmeta = multi["_meta"]
     multi_overlap = mmeta["overlap_factor"]
 
     # invariants
-    pools = [frozenset(d.id for d in p.alive_devices()) for p in pm2.pilots]
+    pools = [frozenset(d.id for d in p.alive_devices()) for p in pilots2]
     assert len(pools) >= 2, f"expected >=2 pilots, got {len(pools)}"
     for i in range(len(pools)):
         for j in range(i + 1, len(pools)):
             assert not pools[i] & pools[j], (
                 f"pilot pools overlap: {pools[i] & pools[j]}")
-    assert len(set(mmeta["placement"].values())) >= 2, (
+    used = {uid for stages in mmeta["placement"].values()
+            for uid in stages.values()}
+    assert len(used) >= 2, (
         f"placement used one pilot only: {mmeta['placement']}")
     assert mmeta["quota_violations"] == {}, mmeta["quota_violations"]
+    # SUM across agents: quota'd pipelines stick to one pod (Session
+    # sticky placement), so the pipeline-WIDE cap must hold even when
+    # every agent's local ledger is combined
     peaks_by_group: dict = {}
     for peaks in mmeta["group_peaks"].values():
         for g, peak in peaks.items():
-            peaks_by_group[g] = max(peaks_by_group.get(g, 0), peak)
+            peaks_by_group[g] = peaks_by_group.get(g, 0) + peak
     over = {g: p for g, p in peaks_by_group.items() if p > quota}
     assert not over, f"lease trace shows pipelines over quota: {over}"
     for name in list(mmeta["per_pipeline"]):

@@ -1,6 +1,8 @@
-"""Fault-tolerance demo: a training task that loses devices mid-run is
-retried by the RemoteAgent on the surviving pool and resumes from the last
-async checkpoint — the Deep RC isolation story end-to-end.
+"""Fault-tolerance demo: a training stage that loses devices mid-run is
+retried by the runtime on the surviving pool and resumes from the last
+async checkpoint — the Deep RC isolation story end-to-end, through the
+Session API (the stage declares ``checkpoint=`` and reads
+``ctx.resume_step``; Session.close() recycles the surviving devices).
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python examples/fault_tolerant_train.py
@@ -13,29 +15,29 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import store
-from repro.core.agent import RemoteAgent
-from repro.core.pilot import PilotDescription, PilotManager
-from repro.core.task import DeviceFailure, TaskDescription
+from repro.core import Session, stage
+from repro.core.task import DeviceFailure
 
 CKPT = "/tmp/deep_rc_ft_demo"
 STATE = {"w": jnp.zeros((4,)), "step": jnp.asarray(0)}
 
 
-def train_task(comm, resume_step=None):
+@stage(kind="train", max_retries=2, checkpoint=CKPT)
+def train(ctx):
     # checkpoint-aware retry: the agent reads the last completed step from
-    # the checkpoint dir and hands it in on every retried attempt — the
-    # task no longer rediscovers it with store.latest_step itself
+    # the checkpoint dir and hands it in as ctx.resume_step on every
+    # retried attempt — the stage body no longer rediscovers it itself
     state = STATE
     start = 0
-    if resume_step is not None:
-        state = store.restore(CKPT, STATE, step=resume_step)
+    if ctx.resume_step is not None:
+        state = store.restore(CKPT, STATE, step=ctx.resume_step)
         start = int(state["step"])
-        print(f"  agent handed resume_step={resume_step}; resuming at {start}")
+        print(f"  agent handed resume_step={ctx.resume_step}; resuming at {start}")
     for i in range(start, 10):
         state = {"w": state["w"] + 1.0, "step": state["step"] + 1}
         store.save(CKPT, i + 1, state)
         if i == 4 and start == 0:  # first attempt dies mid-run
-            raise DeviceFailure([d.id for d in comm.devices[:2]],
+            raise DeviceFailure([d.id for d in ctx.comm.devices[:2]],
                                 "injected mid-training failure")
     return {"final_w": float(state["w"][0]), "steps": int(state["step"])}
 
@@ -43,19 +45,27 @@ def train_task(comm, resume_step=None):
 if __name__ == "__main__":
     import shutil
     shutil.rmtree(CKPT, ignore_errors=True)
-    pm = PilotManager()
-    pilot = pm.submit_pilot(PilotDescription())
-    agent = RemoteAgent(pilot, max_workers=2)
-    # non-blocking submission: the call returns before the task runs; the
-    # dispatcher launches it in the background and `wait` joins the result
-    task, = agent.submit_async([TaskDescription(
-        name="ft-train", fn=train_task, num_devices=pilot.size, max_retries=2,
-        checkpoint_dir=CKPT)])
-    assert not task.finalized, "submit_async must return before completion"
-    print("submitted (non-blocking), state:", task.state.value)
-    agent.wait([task])
-    print("state:", task.state.value, "result:", task.result,
-          "attempts:", task.attempts)
-    print("alive devices after failure:", len(pilot.alive_devices()), "/", pilot.size)
-    assert task.result["steps"] == 10 and task.attempts == 2
-    print("fault_tolerant_train OK")
+    n_dev = len(jax.devices())
+    assert n_dev >= 3, (
+        f"demo needs >=3 devices to survive losing 2, have {n_dev}; unset "
+        "XLA_FLAGS or use --xla_force_host_platform_device_count=8")
+    with Session(max_workers_per_pilot=2) as session:
+        # non-blocking submission: start() returns before the stage runs;
+        # the dispatcher launches it in the background and wait() joins.
+        # The stage width adapts to the actual pool (num_devices=n_dev).
+        pipe = session.start(train.options(num_devices=n_dev), name="ft")
+        print("submitted (non-blocking), finished:", pipe.finished)
+        assert not pipe.finished, "start must return before completion"
+        pipe.wait()
+        task = pipe.tasks["train"]
+        print("state:", task.state.value, "result:", task.result,
+              "attempts:", task.attempts)
+        pilot, = session.pilots
+        print("alive devices after failure:",
+              len(pilot.alive_devices()), "/", pilot.size)
+        assert task.result["steps"] == 10 and task.attempts == 2
+        alive = len(pilot.alive_devices())
+    # close() recycled the SURVIVING devices back to the manager's pool
+    assert session.manager.free_devices() == alive == n_dev - 2
+    print("fault_tolerant_train OK (survivors recycled:",
+          session.manager.free_devices(), "of", n_dev, ")")

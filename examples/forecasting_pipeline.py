@@ -1,11 +1,11 @@
 """Paper Table-3 pipeline: NeuralForecast-analogue models trained and
-evaluated through Deep RC — as N *concurrent* pipelines batched under the
-pilot layer (the Table-4 mode), not a serial loop.
+evaluated through Deep RC — as N *concurrent* stage graphs batched under
+one Session (the Table-4 mode), not a serial loop.
 
-Single-pilot by default; ``--pilots 2`` splits the emulated device pool
-into disjoint per-pod pilots and places one model pipeline per pod via
-the PilotManager scheduler; ``--quota N`` caps each pipeline's concurrent
-device share (fairness under contention).
+Single shared pod by default; ``--pilots 2`` splits the emulated device
+pool into disjoint per-pod pilots and the Session's per-stage placement
+policy spreads the model stages across them; ``--quota N`` caps each
+pipeline's concurrent device share (fairness under contention).
 
   PYTHONPATH=src python examples/forecasting_pipeline.py \
       [--models NLinear,GRU] [--steps 60] [--pilots 2] [--quota 1]
@@ -16,8 +16,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks import paper_tables as P
-from repro.core.bridge import dl_stage
-from repro.core.pipeline import Pipeline, run_pipelines, run_pipelines_multi
+from repro.core import Session, StageGraph, stage
 from repro.models import forecasting as F
 
 if __name__ == "__main__":
@@ -25,23 +24,27 @@ if __name__ == "__main__":
     ap.add_argument("--models", default=",".join(list(F.MODELS)[:3]))
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--pilots", type=int, default=1,
-                    help="number of disjoint pilots to spread pipelines over")
+                    help="number of disjoint pods to spread pipelines over")
     ap.add_argument("--quota", type=int, default=None,
                     help="per-pipeline concurrent-device cap")
     args = ap.parse_args()
     names = args.models.split(",")
 
+    @stage(kind="train", name="train")
+    def train_model(ctx, model_name, steps):
+        return P._train_forecaster(model_name, steps)
+
+    # one single-stage graph per model, compiled to a pipeline named after
+    # the model so results stay keyed the way Table 3 reports them
     pipes = [
-        Pipeline(name, [
-            dl_stage("train", lambda c, u, nm=name: P._train_forecaster(
-                nm, args.steps), kind="train"),
-        ], quota=args.quota)
-        for name in names
+        StageGraph([train_model.bind(nm, args.steps)])
+        .compile(nm, quota=args.quota)
+        for nm in names
     ]
-    if args.pilots > 1:
-        out = run_pipelines_multi(pipes, num_pilots=args.pilots)
-    else:
-        out = run_pipelines(pipes, max_workers=4)
+    with Session(pods=args.pilots if args.pilots > 1 else None,
+                 max_workers_per_pilot=4) as session:
+        out = session.run_all(pipes)
+    meta = out["_meta"]
     failed = False
     for name in names:
         if "_error" in out[name]:  # fault isolation: siblings still report
@@ -52,7 +55,6 @@ if __name__ == "__main__":
         r = out[name]["train"]
         print(f"{name:20s} MAE={r['MAE']:.3f} MSE={r['MSE']:.3f} "
               f"MAPE={r['MAPE']:.2f}% train={r['train_s']:.1f}s")
-    meta = out["_meta"]
     print(f"batch wall={meta['wall_s']:.1f}s "
           f"task_busy={meta['task_busy_s']:.1f}s "
           f"overlap_factor={meta['overlap_factor']:.2f}")

@@ -1,6 +1,7 @@
 """Paper Tables 1-2 pipeline: LSTM hydrology model on synthetic CAMELS-like
 data through Deep RC, with the Table-2 overhead decomposition surfaced from
-the scheduler's per-task accounting (queue / communicator-build / execute).
+the scheduler's per-task accounting (queue / communicator-build / execute)
+— written against the Session API (`@stage` graph, per-stage placement).
 
   PYTHONPATH=src python examples/hydrology_pipeline.py
 """
@@ -9,8 +10,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.paper_tables import bench_hydrology
-from repro.core.bridge import cylon_stage, dl_stage
-from repro.core.pipeline import Pipeline, run_pipelines
+from repro.core import Session, stage
 
 if __name__ == "__main__":
     rows = bench_hydrology(full=False)
@@ -19,25 +19,35 @@ if __name__ == "__main__":
 
     # Table-2 decomposition through the async scheduler: a minimal
     # preprocess -> train DAG whose per-task overheads are recorded by the
-    # agent and aggregated into run_pipelines' _meta.  The pipeline runs
-    # through the full PilotManager -> Pilot -> Transport stack; each
-    # stage's communicator records which pilot pool it was carved from.
+    # agent.  The graph runs through the full Session -> PilotManager ->
+    # Pilot -> Transport stack; each stage's communicator records which
+    # pilot pool it was carved from.
     pilots_seen = set()
 
     def note_pilot(c, v):
         pilots_seen.add(getattr(c, "pilot_uid", None))
         return v
 
-    pipe = Pipeline("hydro", [
-        cylon_stage("preprocess", lambda c, u: note_pilot(c, 1.0)),
-        dl_stage("train", lambda c, u: note_pilot(c, u["preprocess"] * 2),
-                 deps=("preprocess",)),
-    ], quota=1)  # cap: hydro never holds more than 1 device at once
-    out = run_pipelines([pipe])
-    for stage, task in pipe.tasks.items():
-        print(f"overhead/{stage:12s} queue={task.overhead_s['queue']*1e3:.2f}ms "
-              f"communicator={task.overhead_s['communicator']*1e3:.2f}ms "
-              f"execute={task.duration_s*1e3:.2f}ms")
-    print(f"pipeline wall={out['_meta']['wall_s']*1e3:.1f}ms "
-          f"pilot={out['_meta']['pilot']} carved_from={sorted(pilots_seen)}")
+    @stage(kind="data_engineering")
+    def preprocess(ctx):
+        return note_pilot(ctx.comm, 1.0)
+
+    @stage(kind="train")
+    def train(ctx):
+        return note_pilot(ctx.comm, ctx.upstream["preprocess"] * 2)
+
+    with Session() as session:
+        # quota=1: hydro never holds more than 1 device at once
+        pipe = session.start(preprocess >> train, name="hydro", quota=1)
+        pipe.wait()
+        if pipe.error is not None:
+            raise RuntimeError(pipe.error)
+        for stage_name, task in pipe.tasks.items():
+            print(f"overhead/{stage_name:12s} "
+                  f"queue={task.overhead_s['queue']*1e3:.2f}ms "
+                  f"communicator={task.overhead_s['communicator']*1e3:.2f}ms "
+                  f"execute={task.duration_s*1e3:.2f}ms")
+        print(f"pipeline wall={pipe.wall_s*1e3:.1f}ms "
+              f"placement={pipe.stage_placements()} "
+              f"carved_from={sorted(pilots_seen)}")
     print("hydrology pipeline OK")

@@ -1,7 +1,9 @@
-"""Quickstart: the minimal Deep RC pipeline on one device.
+"""Quickstart: the minimal Deep RC pipeline through the Session API.
 
 Synthetic table -> Cylon-analogue preprocess -> zero-copy Data Bridge ->
-train a tiny linear model -> postprocess, all under the pilot runtime.
+train a tiny linear model -> postprocess, written as a stage graph
+(`@stage` + `>>`) and run under one Session — no manual PilotManager /
+RemoteAgent / Pipeline wiring, and devices are recycled on exit.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,14 +14,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.agent import RemoteAgent
-from repro.core.bridge import cylon_stage, data_bridge, dl_stage
-from repro.core.pilot import PilotDescription, PilotManager
-from repro.core.pipeline import Pipeline
+from repro.core import Session, stage
+from repro.core.bridge import data_bridge
 from repro.dataframe.table import Table
 
 
-def preprocess(comm, upstream):
+@stage(kind="data_engineering")
+def preprocess(ctx):
     rng = np.random.default_rng(0)
     n = 4096
     x1, x2 = rng.normal(size=n).astype(np.float32), rng.normal(size=n).astype(np.float32)
@@ -27,8 +28,9 @@ def preprocess(comm, upstream):
     return Table.from_columns({"x1": x1, "x2": x2, "y": y})
 
 
-def train(comm, upstream):
-    loader = data_bridge(upstream["preprocess"], ["x1", "x2"], "y", 512)
+@stage(kind="train")
+def train(ctx):
+    loader = data_bridge(ctx.upstream["preprocess"], ["x1", "x2"], "y", 512)
     w, b = jnp.zeros((2,)), jnp.zeros(())
 
     @jax.jit
@@ -46,21 +48,24 @@ def train(comm, upstream):
     return {"w": np.asarray(w), "loss": float(loss)}
 
 
-def postprocess(comm, upstream):
-    r = upstream["train"]
+@stage(kind="inference")
+def postprocess(ctx):
+    r = ctx.dep("train")
     return {"w": r["w"].round(3).tolist(), "final_loss": r["loss"]}
 
 
 if __name__ == "__main__":
-    pm = PilotManager()
-    agent = RemoteAgent(pm.submit_pilot(PilotDescription()), max_workers=2)
-    pipe = Pipeline("quickstart", [
-        cylon_stage("preprocess", preprocess),
-        dl_stage("train", train, deps=("preprocess",)),
-        dl_stage("postprocess", postprocess, deps=("train",), kind="inference"),
-    ])
-    out = pipe.run(agent)
-    print("result:", out["postprocess"])
-    print("train-task overheads:", pipe.tasks["train"].overhead_s)
+    with Session(max_workers_per_pilot=2) as session:
+        pipe = session.start(preprocess >> train >> postprocess,
+                             name="quickstart")
+        pipe.wait()
+        if pipe.error is not None:
+            raise RuntimeError(pipe.error)
+        out = pipe.results
+        print("result:", out["postprocess"])
+        print("train-task overheads:", pipe.tasks["train"].overhead_s)
+        print("placement:", pipe.stage_placements())
     assert out["postprocess"]["final_loss"] < 0.1
+    assert session.manager.free_devices() == session.manager.total_devices, \
+        "Session.close() must recycle the pilot's devices"
     print("quickstart OK")

@@ -1,3 +1,15 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# The user-facing entry point is the Session facade + stage-graph DSL;
+# the layered runtime underneath (PilotManager -> Pilot -> RemoteAgent
+# -> Transport) stays importable from its own modules.
+from repro.core.session import (KindAwarePlacement, PlacementPolicy,
+                                ServiceHandle, Session, StageContext,
+                                StageGraph, StageSpec, stage)
+
+__all__ = [
+    "Session", "ServiceHandle", "stage", "StageContext", "StageSpec",
+    "StageGraph", "PlacementPolicy", "KindAwarePlacement",
+]

@@ -4,6 +4,12 @@
   (repro.bridge.loader).  The GT's device buffers ARE the training input.
 * ``system_bridge`` — wraps a dataframe operation as a pilot task whose
   output feeds downstream train/infer tasks (resource flow Cylon -> RP).
+
+``cylon_stage`` / ``dl_stage`` build raw :class:`Stage` objects for the
+positional ``fn(comm, upstream, *args)`` contract; new code should
+prefer the ``@stage`` decorator DSL in :mod:`repro.core.session`, whose
+kinds (``data_engineering`` / ``train`` / ``inference``) drive the
+Session's per-stage pod placement the same way.
 """
 from __future__ import annotations
 

@@ -13,8 +13,10 @@ silently aliasing (`devices[:n]` overlap was a seed bug).  It is also the
 placement scheduler for the multi-pilot mode (paper Table 4 across
 per-pod pools): ``place`` picks the pilot with the most effective free
 capacity among those that admit a task kind and still satisfy a mesh
-requirement.  Pipeline-level orchestration on top of ``place`` (start,
-migrate-on-degradation) lives in :class:`repro.core.pipeline.MultiPilotScheduler`.
+requirement.  Orchestration on top of ``place`` lives one layer up:
+per-STAGE placement/migration in :class:`repro.core.session.Session`
+(the user-facing facade), whole-pipeline placement in
+:class:`repro.core.pipeline.MultiPilotScheduler`.
 """
 from __future__ import annotations
 

@@ -3,6 +3,12 @@ the pilot runtime (paper Fig. 2/3), plus the multi-pipeline batching mode
 of Table 4 — N pipelines under one pilot (``PipelineScheduler``) or
 spread across several disjoint pilots (``MultiPilotScheduler``).
 
+The user-facing entry point is :class:`repro.core.session.Session` with
+the ``@stage`` graph DSL; it drives pipelines through the per-stage
+``placement`` hook below, so one DAG's stages can resolve to *different*
+agents (cross-pilot dependency edges).  ``run_pipelines`` /
+``run_pipelines_multi`` remain as deprecated shims.
+
 Stage readiness is **event-driven**: each stage is submitted the moment
 its dependencies complete (a task-completion callback fires the next
 wave), so independent stages of *different* pipelines overlap freely on
@@ -29,6 +35,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from repro.core.agent import RemoteAgent
@@ -73,8 +80,12 @@ class Pipeline:
       into the caller.  Used by :class:`PipelineScheduler`.
 
     ``quota`` caps how many devices this pipeline's stages may hold at
-    once on its agent (enforced by the agent dispatcher; see
-    ``RemoteAgent.set_quota``).  ``rebind(agent)`` re-points not-yet-
+    once on an agent (enforced by each agent's dispatcher; see
+    ``RemoteAgent.set_quota``).  Enforcement is per agent: under
+    per-stage placement the Session keeps quota'd pipelines sticky to
+    one pod so the cap stays pipeline-wide; if kind constraints or
+    degradation force stages onto K pods, the cap applies per pod
+    (global bound quota*K).  ``rebind(agent)`` re-points not-yet-
     submitted stages at a different agent — the migration primitive used
     by :class:`MultiPilotScheduler`.
 
@@ -87,7 +98,9 @@ class Pipeline:
     """
 
     def __init__(self, name: str, stages: Sequence[Stage],
-                 quota: Optional[int] = None):
+                 quota: Optional[int] = None,
+                 placement: Optional[Callable[[Stage],
+                                              Optional[RemoteAgent]]] = None):
         self.name = name
         self.stages = list(stages)
         self.quota = quota
@@ -98,14 +111,24 @@ class Pipeline:
         self.started_at: Optional[float] = None
         self.finished_at: Optional[float] = None
         self.migrations: List[Dict[str, Any]] = []
+        # per-stage placement: when set, each stage resolves its OWN agent
+        # through this callable the moment it becomes ready (deps done), so
+        # one DAG's stages can span several pilots with real dependency
+        # edges crossing agents.  ``None`` from the resolver marks the
+        # stage unplaceable and fails the pipeline.  ``stage_agents``
+        # records where each submitted stage actually ran.
+        self.placement = placement
+        self.stage_agents: Dict[str, RemoteAgent] = {}
         # one control handle per service stage, created eagerly so callers
         # can hold the handle before (and across) the stage's task attempts
         self.service_controls: Dict[str, ServiceControl] = {
             s.name: ServiceControl() for s in self.stages if s.service}
         self._lock = threading.Lock()
         self._submitted: set = set()
+        self._quota_agents: set = set()  # agent ids already given our quota
         self._agent: Optional[RemoteAgent] = None
         self._on_finish: Optional[Callable[["Pipeline"], None]] = None
+        self._stage_observers: List[Callable[["Pipeline", Stage, Task], None]] = []
         self._finishing = False  # test-and-set under _lock (see _finish)
         self._finished_evt = threading.Event()
 
@@ -138,9 +161,20 @@ class Pipeline:
     def finished(self) -> bool:
         return self._finished_evt.is_set()
 
-    def start(self, agent: RemoteAgent,
+    def add_stage_observer(
+            self, cb: Callable[["Pipeline", Stage, Task], None]) -> None:
+        """Register ``cb(pipeline, stage, task)`` to fire whenever a stage's
+        task finalizes (success or failure) — the per-stage hook Session's
+        placement load accounting and live monitors key off."""
+        with self._lock:
+            self._stage_observers.append(cb)
+
+    def start(self, agent: Optional[RemoteAgent] = None,
               on_finish: Optional[Callable[["Pipeline"], None]] = None) -> None:
-        """Submit all currently-ready stages and return immediately."""
+        """Submit all currently-ready stages and return immediately.
+
+        ``agent`` may be None when a per-stage ``placement`` resolver is
+        set — every stage then resolves its own agent individually."""
         self._validate_dag()
         with self._lock:
             # first bind only: a rebind() that raced in between placement
@@ -149,7 +183,11 @@ class Pipeline:
                 self._agent = agent
             effective = self._agent
             self._on_finish = on_finish
-        if self.quota is not None:
+        if effective is None and self.placement is None:
+            raise RuntimeError(
+                f"pipeline {self.name}: start() needs an agent or a "
+                "per-stage placement resolver")
+        if self.quota is not None and effective is not None:
             effective.set_quota(self.name, self.quota)
         self.started_at = time.time()
         if not self.stages:
@@ -212,7 +250,7 @@ class Pipeline:
                 return False
         return True
 
-    def run(self, agent: RemoteAgent) -> Dict[str, Any]:
+    def run(self, agent: Optional[RemoteAgent] = None) -> Dict[str, Any]:
         """Blocking single-pipeline execution; raises on stage failure."""
         self.start(agent)
         self.wait()
@@ -228,6 +266,13 @@ class Pipeline:
             # duplicate would make completion counting hang, not overwrite
             raise RuntimeError(
                 f"pipeline {self.name}: duplicate stage names")
+        for s in self.stages:
+            missing = [d for d in s.deps if d not in names]
+            if missing:  # distinct from a cycle: the stage waits on a name
+                # that will never complete because it does not exist
+                raise RuntimeError(
+                    f"pipeline {self.name}: stage {s.name} depends on "
+                    f"unknown stage(s) {sorted(missing)}")
         service_names = {s.name for s in self.stages if s.service}
         for s in self.stages:
             bad = service_names & set(s.deps)
@@ -239,12 +284,42 @@ class Pipeline:
         done: set = set()
         remaining = list(self.stages)
         while remaining:
-            ready = [s for s in remaining
-                     if all(d in done and d in names for d in s.deps)]
+            ready = [s for s in remaining if all(d in done for d in s.deps)]
             if not ready:
                 raise RuntimeError(f"pipeline {self.name}: dependency cycle")
             done.update(s.name for s in ready)
             remaining = [s for s in remaining if s not in ready]
+
+    def _resolve_agent(self, stage: Stage) -> Optional[RemoteAgent]:
+        """Per-stage agent resolution (called OUTSIDE the pipeline lock —
+        a placement policy takes pilot/session locks of its own)."""
+        if self.placement is not None:
+            agent = self.placement(stage)
+        else:
+            with self._lock:
+                agent = self._agent  # rebind() may race; read under lock
+        if agent is not None and self.quota is not None:
+            with self._lock:
+                first_touch = id(agent) not in self._quota_agents
+                self._quota_agents.add(id(agent))
+            if first_touch:
+                agent.set_quota(self.name, self.quota)
+        return agent
+
+    def _mark_unplaceable(self, stage: Stage) -> None:
+        """A ready stage no pilot can host fails the pipeline; the stage is
+        un-marked from _submitted so the error barrier count stays exact."""
+        with self._lock:
+            self._submitted.discard(stage.name)
+            if self.error is None:
+                self.error = (
+                    f"stage {stage.name} unplaceable: no pilot admits "
+                    f"kind={stage.kind!r} with >= {stage.num_devices} "
+                    "alive devices")
+                self.failed_stage = stage.name
+            finished = self._is_finished_locked()
+        if finished:
+            self._finish()
 
     def _submit_ready(self) -> None:
         with self._lock:
@@ -257,8 +332,17 @@ class Pipeline:
             ]
             self._submitted.update(s.name for s in ready)
             upstreams = [{d: self.results[d] for d in s.deps} for s in ready]
-            agent = self._agent  # read under the lock: rebind() may race
         for s, upstream in zip(ready, upstreams):
+            with self._lock:
+                failing = self.error is not None
+            if failing:  # an earlier stage in this wave was unplaceable:
+                # withdraw the rest of the wave and re-check the barrier
+                self._mark_unplaceable_noop(s)
+                continue
+            agent = self._resolve_agent(s)
+            if agent is None:
+                self._mark_unplaceable(s)
+                continue
 
             def wrap(fn, upstream, args):
                 # **kw forwards the agent's resume_step on checkpointed
@@ -266,6 +350,8 @@ class Pipeline:
                 # plain stages never receive extra kwargs
                 return lambda comm, **kw: fn(comm, upstream, *args, **kw)
 
+            with self._lock:
+                self.stage_agents[s.name] = agent
             tasks = agent.submit_async(
                 [TaskDescription(
                     name=f"{self.name}/{s.name}",
@@ -279,15 +365,30 @@ class Pipeline:
                 )],
                 on_complete=lambda task, s=s: self._stage_done(s, task),
             )
-            if s.service:
-                # recorded at submit so stop_services (and callers reading
-                # live stats) can reach the task before it finalizes
-                with self._lock:
-                    self.tasks[s.name] = tasks[0]
+            # recorded at SUBMIT time (not completion) so live readers —
+            # metrics, migration decisions, stop_services — can see
+            # running stages; _stage_done re-records the same object
+            with self._lock:
+                self.tasks.setdefault(s.name, tasks[0])
+
+    def _mark_unplaceable_noop(self, stage: Stage) -> None:
+        """Withdraw a wave-mate of an unplaceable stage without touching
+        the (already set) error."""
+        with self._lock:
+            self._submitted.discard(stage.name)
+            finished = self._is_finished_locked()
+        if finished:
+            self._finish()
+
+    def stage_placements(self) -> Dict[str, str]:
+        """Pilot uid each submitted stage resolved to (live view)."""
+        with self._lock:
+            return {name: a.pilot.uid for name, a in self.stage_agents.items()}
 
     def _stage_done(self, stage: Stage, task: Task) -> None:
         with self._lock:
             self.tasks[stage.name] = task
+            observers = list(self._stage_observers)
             if task.state == TaskState.DONE:
                 self.results[stage.name] = task.result
             elif not stage.service and self.error is None:
@@ -300,6 +401,11 @@ class Pipeline:
                 # back into error state
                 pass
             finished = self._is_finished_locked()
+        for cb in observers:  # outside the lock: observers take their own
+            try:              # locks (e.g. Session's placement accounting)
+                cb(self, stage, task)
+            except Exception:  # noqa: BLE001 — observers must not poison
+                pass           # the DAG driver
         if finished:
             self._finish()
         elif self.error is None:
@@ -384,21 +490,30 @@ class PipelineScheduler:
 
 def aggregate_metrics(pipelines: Sequence[Pipeline], wall: float) -> Dict[str, Any]:
     """Table-2/Table-4 decomposition: per-pipeline wall + overheads and
-    the aggregate overlap factor (sum of task busy time / batch wall)."""
+    the aggregate overlap factor (sum of task busy time / batch wall).
+
+    Safe on LIVE pipelines: tasks are recorded at submit time, so a stage
+    still running shows up here — it is listed under the pipeline's
+    ``running`` key and counted in the aggregate ``n_running`` instead of
+    being invisible until completion."""
     per_pipeline: Dict[str, Any] = {}
     agg = {"queue_s": 0.0, "communicator_s": 0.0, "task_busy_s": 0.0,
-           "n_tasks": 0, "n_failed": 0}
+           "n_tasks": 0, "n_failed": 0, "n_running": 0}
     for p in pipelines:
+        with p._lock:  # snapshot: submit-time recording mutates concurrently
+            tasks = dict(p.tasks)
+        running = sorted(n for n, t in tasks.items() if not t.finalized)
         ov = {"queue_s": 0.0, "communicator_s": 0.0, "task_busy_s": 0.0}
-        for t in p.tasks.values():
+        for t in tasks.values():
             ov["queue_s"] += t.overhead_s.get("queue", 0.0)
             ov["communicator_s"] += t.overhead_s.get("communicator", 0.0)
             ov["task_busy_s"] += t.duration_s or 0.0
             agg["n_tasks"] += 1
             # a still-running service task is neither done nor failed
             agg["n_failed"] += int(t.finalized and t.state != TaskState.DONE)
+        agg["n_running"] += len(running)
         per_pipeline[p.name] = {
-            "wall_s": p.wall_s, "error": p.error, **ov}
+            "wall_s": p.wall_s, "error": p.error, "running": running, **ov}
         for k in ("queue_s", "communicator_s", "task_busy_s"):
             agg[k] += ov[k]
     return {
@@ -416,11 +531,18 @@ def run_pipelines(
     max_workers: int = 8,
     transport=None,
 ) -> Dict[str, Dict[str, Any]]:
-    """Table-4 mode: N pipelines share one pilot/agent (vs N bare-metal
+    """DEPRECATED shim — use :class:`repro.core.session.Session` (its
+    ``run_all``) instead; kept so pre-Session callers and tests keep
+    working unchanged.
+
+    Table-4 mode: N pipelines share one pilot/agent (vs N bare-metal
     runs re-acquiring resources per pipeline).  Thin wrapper over
     :class:`PipelineScheduler`; stages of different pipelines genuinely
     overlap, and ``_meta`` carries the per-pipeline + aggregate wall /
     overhead decomposition."""
+    warnings.warn(
+        "run_pipelines is deprecated; use repro.core.Session "
+        "(session.run_all) instead", DeprecationWarning, stacklevel=2)
     own = False
     if pilot is None:
         pilot = PilotManager().submit_pilot(PilotDescription())
@@ -587,11 +709,18 @@ def run_pipelines_multi(
     num_pilots: int = 2,
     max_workers_per_pilot: Optional[int] = None,
 ) -> Dict[str, Dict[str, Any]]:
-    """Multi-pilot Table-4 mode: split the machine into ``num_pilots``
+    """DEPRECATED shim — use :class:`repro.core.session.Session` with
+    ``pods=num_pilots`` instead; kept so pre-Session callers and tests
+    keep working unchanged.
+
+    Multi-pilot Table-4 mode: split the machine into ``num_pilots``
     disjoint per-pod pools and spread N pipelines across them.  With a
     caller-supplied ``manager`` its existing pilots are used as-is
     (pre-shaped pools, e.g. kind-specialised pods); otherwise the free
     device inventory is split evenly."""
+    warnings.warn(
+        "run_pipelines_multi is deprecated; use repro.core.Session "
+        "(pods=N, session.run_all) instead", DeprecationWarning, stacklevel=2)
     if manager is None:
         manager = PilotManager()
     if not manager.pilots:

@@ -21,9 +21,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import RunConfig
-from repro.core.agent import RemoteAgent
-from repro.core.pilot import PilotDescription, PilotManager
-from repro.core.pipeline import Pipeline, Stage
+from repro.core import Session, stage
+from repro.core.pilot import PilotDescription
 from repro.serve import Request, ServeEngine
 
 
@@ -36,28 +35,26 @@ def run(args) -> dict:
     engine = ServeEngine(cfg, RunConfig(), max_slots=slots, max_len=max_len,
                          seed=0)
 
-    def serve_stage(comm, upstream, control=None, resume_state=None):
-        return engine.run_service(control, resume_state=resume_state)
+    @stage(kind="inference", service=True, name="engine")
+    def serve_stage(ctx):
+        return engine.run_service(ctx.control, resume_state=ctx.resume_state)
 
-    pm = PilotManager()
-    pilot = pm.submit_pilot(PilotDescription(name="serve-pod"))
-    # the agent must OWN its transport: close() then drains the worker
-    # pool, so the service lease is back before the pilot is recycled
-    agent = RemoteAgent(pilot, max_workers=2)
-    try:
-        pipe = Pipeline("serve", [
-            Stage("engine", serve_stage, kind="inference", service=True)])
-        pipe.start(agent)
-        ctl = pipe.control("engine")
+    # the Session's agents OWN their transports: close() drains the worker
+    # pool, so the service lease is back before the pilot is recycled —
+    # and close() runs on EVERY exit path (context manager), so a failed
+    # serve task can no longer leak the pilot's devices
+    with Session(pods=[PilotDescription(name="serve-pod")],
+                 max_workers_per_pilot=2) as session:
+        handle = session.serve(serve_stage, name="serve")
 
         rng = np.random.default_rng(1)
         t0 = time.time()
         requests = [
-            ctl.submit_request(Request(
+            handle.submit_request(Request(
                 rng.integers(1, cfg.vocab_size, args.prompt_len),
                 max_new_tokens=args.gen))
             for _ in range(args.batch)]
-        task = pipe.tasks["engine"]
+        task = handle.task
         deadline = time.time() + 600
         for r in requests:
             while not r.wait(timeout=1.0):
@@ -68,7 +65,7 @@ def run(args) -> dict:
                 if time.time() > deadline:
                     raise RuntimeError(f"request {r.rid} did not finish")
         wall = time.time() - t0
-        if not pipe.stop_services(drain=True, timeout=60):
+        if not handle.stop(drain=True, timeout=60):
             raise RuntimeError("service stage did not drain")
         if task.error:
             raise RuntimeError(task.error)
@@ -95,15 +92,6 @@ def run(args) -> dict:
               f"{res['latency_p50_s']*1e3:.0f}ms, p50 ttft "
               f"{res['ttft_p50_s']*1e3:.0f}ms; overheads {task.overhead_s}")
         return res
-    finally:
-        # a failed serve task must not leak the pilot's devices: close the
-        # agent (stops any still-running service, drains its worker pool)
-        # and recycle the pool
-        agent.close()
-        try:
-            pm.cancel_pilot(pilot)
-        except RuntimeError:
-            pass  # a lease is somehow still out: keep the ORIGINAL error
 
 
 def build_parser():

@@ -1,10 +1,14 @@
-"""End-to-end Deep RC training driver.
+"""End-to-end Deep RC training driver (Session API).
 
-The full paper pipeline under the pilot runtime:
+The full paper pipeline as ONE stage graph under a Session:
 
   synthetic corpus -> Cylon-analogue Table (dedup/shuffle on a worker mesh)
   -> zero-copy Data Bridge -> LM train loop (pjit, microbatched, AdamW)
   -> async checkpointing (+restart) -> postprocess (eval perplexity)
+
+Under ``--kind-pods`` the same graph runs with its data-engineering stage
+placed on a data pod and its DL stages on a DL pod — per-stage placement,
+the dependency edge crossing pilots.
 
 CLI:
   PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m --smoke \
@@ -27,10 +31,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import store
 from repro.configs import get_config
 from repro.configs.base import RunConfig
-from repro.core.agent import RemoteAgent
-from repro.core.bridge import cylon_stage, dl_stage
+from repro.core import Session, stage
 from repro.core.pilot import PilotDescription, PilotManager
-from repro.core.pipeline import Pipeline
 from repro.dataframe.table import Table
 from repro.launch.mesh import make_mesh
 from repro.train.state import init_train_state, train_state_specs
@@ -53,27 +55,27 @@ def run(args) -> dict:
                         learning_rate=args.lr)
     ckpt_dir = args.ckpt_dir or os.path.join("results", "ckpt", cfg.name)
 
-    pm = PilotManager()
     # kind-aware pods: split the machine into a data-engineering pod and a
-    # DL pod (PilotDescription(task_kinds=...)); stage kinds route work to
-    # the pod that admits them.  Falls back to one shared pilot when the
-    # machine cannot back two pools.
+    # DL pod (PilotDescription(task_kinds=...)); the Session's placement
+    # policy routes each STAGE to the pod admitting its kind, so the DAG
+    # below stays ONE pipeline whose dependency edges cross pilots.
+    # Falls back to one shared pod when the machine cannot back two pools.
+    pm = PilotManager()  # inventory; the Session materializes pods lazily
     kind_pods = args.kind_pods and pm.free_devices() >= 2
     if kind_pods:
         n_data = max(1, pm.free_devices() // 4)
-        data_pilot = pm.submit_pilot(PilotDescription(
-            num_devices=n_data, name="pod-data",
-            task_kinds=("data_engineering",)))
-        dl_pilot = pm.submit_pilot(PilotDescription(
-            name="pod-dl", task_kinds=("train", "inference")))
-        data_agent = RemoteAgent(data_pilot, max_workers=2)
-        agent = RemoteAgent(dl_pilot, max_workers=2)
+        pods = [
+            PilotDescription(num_devices=n_data, name="pod-data",
+                             task_kinds=("data_engineering",)),
+            PilotDescription(name="pod-dl",
+                             task_kinds=("train", "inference")),
+        ]
     else:
-        data_agent = None
-        pilot = pm.submit_pilot(PilotDescription())
-        agent = RemoteAgent(pilot, max_workers=2)
+        pods = None
+    session = Session(manager=pm, pods=pods, max_workers_per_pilot=2)
 
-    def preprocess(comm, upstream):
+    @stage(kind="data_engineering")
+    def preprocess(ctx):
         corpus = make_corpus(cfg.vocab_size, args.batch * args.seq * (args.steps + 8))
         n_rows = len(corpus) // args.seq
         rows = corpus[: n_rows * args.seq].reshape(n_rows, args.seq)
@@ -82,14 +84,15 @@ def run(args) -> dict:
         )
         return table
 
-    def train(comm, upstream, resume_step=None):
-        table = upstream["preprocess"]
+    @stage(kind="train", checkpoint=ckpt_dir)
+    def train(ctx):
+        table = ctx.upstream["preprocess"]
         state = init_train_state(jax.random.PRNGKey(args.seed), cfg, run_cfg)
         start_step = 0
-        # resume_step is threaded in by the agent on checkpoint-aware
-        # retry (stage declares checkpoint_dir); --resume covers the
+        # ctx.resume_step is threaded in by the agent on checkpoint-aware
+        # retry (the stage declares checkpoint=); --resume covers the
         # cold-start case where the user restarts the whole driver
-        resume_from = resume_step
+        resume_from = ctx.resume_step
         if resume_from is None and args.resume:
             resume_from = store.latest_step(ckpt_dir)
         if resume_from is not None:
@@ -119,49 +122,36 @@ def run(args) -> dict:
         return {"losses": losses, "state_step": int(state["step"]),
                 "train_s": time.time() - t0}
 
-    def postprocess(comm, upstream):
-        r = upstream["train"]
+    @stage(kind="inference")
+    def postprocess(ctx):
+        r = ctx.upstream["train"]
         first = np.mean(r["losses"][:5]) if len(r["losses"]) >= 5 else r["losses"][0]
         last = np.mean(r["losses"][-5:])
         return {"first_loss": float(first), "last_loss": float(last),
                 "improved": bool(last < first), "train_s": r["train_s"],
                 "steps": len(r["losses"])}
 
-    try:
-        if kind_pods:
-            # the data-engineering stage runs on its own pod; its table
-            # feeds the DL pipeline on the DL pod (two pilots, one manager)
-            data_pipe = Pipeline(f"data-{cfg.name}",
-                                 [cylon_stage("preprocess", preprocess)])
-            table = data_pipe.run(data_agent)["preprocess"]
-            pipe = Pipeline(f"train-{cfg.name}", [
-                dl_stage("train",
-                         lambda comm, upstream, **kw: train(
-                             comm, {"preprocess": table}, **kw),
-                         checkpoint_dir=ckpt_dir),
-                dl_stage("postprocess", postprocess, deps=("train",),
-                         kind="inference"),
-            ])
-        else:
-            pipe = Pipeline(f"train-{cfg.name}", [
-                cylon_stage("preprocess", preprocess),
-                dl_stage("train", train, deps=("preprocess",),
-                         checkpoint_dir=ckpt_dir),
-                dl_stage("postprocess", postprocess, deps=("train",),
-                         kind="inference"),
-            ])
-        out = pipe.run(agent)
-    finally:
-        agent.close()
-        if data_agent is not None:
-            data_agent.close()
+    # ONE pipeline regardless of pod layout: under --kind-pods the
+    # preprocess stage resolves to pod-data and train/postprocess to
+    # pod-dl, with the dependency edge crossing agents — no manual split,
+    # no blocking handoff.  Session.close() (the context manager) recycles
+    # agents AND pilots on every exit path, including failures.
+    with session:
+        pipe = session.start(preprocess >> train >> postprocess,
+                             name=f"train-{cfg.name}")
+        pipe.wait()
+        if pipe.error is not None:
+            raise RuntimeError(f"pipeline {pipe.name} {pipe.error}")
+        out = pipe.results
     res = out["postprocess"]
     res["overheads"] = {k: v for k, v in pipe.tasks["train"].overhead_s.items()}
-    res["kind_pods"] = {p.uid: sorted(p.task_kinds) for p in pm.pilots} \
+    res["placement"] = pipe.stage_placements()
+    res["kind_pods"] = {p.uid: sorted(p.task_kinds) for p in session.pilots} \
         if kind_pods else None
     print(f"[deep-rc] {cfg.name}: loss {res['first_loss']:.4f} -> "
           f"{res['last_loss']:.4f} in {res['steps']} steps "
-          f"({res['train_s']:.1f}s); runtime overheads: {res['overheads']}")
+          f"({res['train_s']:.1f}s); runtime overheads: {res['overheads']}; "
+          f"placement: {res['placement']}")
     return res
 
 
