@@ -12,11 +12,13 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--which", default="all",
                     help="comma list: forecasting,hydrology,scaling,"
-                         "multi_pipeline,concurrent,roofline,serving")
+                         "multi_pipeline,concurrent,roofline,serving,"
+                         "decode_kernel")
     args = ap.parse_args()
     from benchmarks import paper_tables as P
     from benchmarks import roofline as R
     from benchmarks.concurrent_pipelines import bench_concurrent_pipelines
+    from benchmarks.decode_kernel import bench_decode_kernel
     from benchmarks.serving import bench_serving
 
     benches = {
@@ -27,6 +29,7 @@ def main() -> None:
         "concurrent": bench_concurrent_pipelines,  # Table 4, async scheduler
         "roofline": R.bench_roofline,            # beyond-paper: §Roofline
         "serving": bench_serving,                # beyond-paper: continuous batching
+        "decode_kernel": bench_decode_kernel,    # beyond-paper: paged flash-decode
     }
     which = list(benches) if args.which == "all" else args.which.split(",")
     print("name,us_per_call,derived")

@@ -84,6 +84,12 @@ class ModelConfig:
     # attention ref-path chunking (lowering-time block sizes)
     q_chunk: int = 1024
     kv_chunk: int = 1024
+    # decode-attention dispatch for the serving hot path (kernels/ops.py):
+    # "auto" = Pallas kernel on TPU, jnp oracle elsewhere (XLA:CPU beats
+    # emulated Pallas); "interpret" forces interpret-mode Pallas (kernel
+    # debugging / CI parity); "ref" pins the oracle (dry-runs / GSPMD
+    # sharding analyses)
+    decode_impl: str = "auto"
 
     def __post_init__(self):
         if self.head_dim == 0:

@@ -1,4 +1,4 @@
-"""Flash-decoding (split-K) GQA decode attention — Pallas TPU kernel.
+"""Flash-decoding (split-K) GQA decode attention — Pallas TPU kernels.
 
 FlashDecoding (arXiv:2311.01282) splits the KV cache across the grid so a
 single query token saturates the chip: each program reduces one KV span
@@ -7,7 +7,28 @@ the partials.  GPU→TPU adaptation: per-SM split-K becomes grid programs
 over VMEM-resident cache tiles; the GQA head group is packed into one MXU
 matmul ([G, D] x [D, block_k]) instead of warp-level broadcast.
 
-Layout: q [B, H, D]; k, v [B, KV, S, D]; cache_len scalar int32.
+Two layouts, one kernel family:
+
+* ``decode_attention`` — contiguous cache rows ``[B, S, KV, D]`` (the
+  model-native slot-cache layout, so the hot path never transposes).
+  ``cache_len`` may be a scalar or a per-row ``[B]`` vector (continuous
+  batching: every slot is at a different point in its sequence).  Lengths
+  ride in as scalar-prefetch operands, masking happens at K-block
+  granularity inside the kernel, and split-K blocks entirely past a row's
+  valid prefix (or entirely before its attention window) are skipped —
+  the skipped program writes neutral partials the combine ignores.
+* ``decode_attention_paged`` — a shared page pool ``[num_pages,
+  page_size, KV, D]`` addressed through a per-row block table
+  ``[B, max_pages]``: the block table is a scalar-prefetch operand and the
+  K/V BlockSpec index maps *gather the physical page* for each (row,
+  logical-page) grid step, so one sequence's KV need not be contiguous in
+  memory (vLLM-style PagedAttention, arXiv:2309.06180).  Out-of-range
+  table entries (free slots use a sentinel) are clamped — they can only
+  map to blocks past the row's length, which the mask discards.
+
+Both take a static ``window`` (0 = full attention): positions outside
+``[cache_len - window, cache_len)`` are masked by the same per-row length
+logic.
 """
 from __future__ import annotations
 
@@ -17,87 +38,217 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
 
-def _dec_kernel(len_ref, q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref, *,
-                scale: float, block_k: int):
-    sj = pl.program_id(1)
-    q = q_ref[0, ...].astype(jnp.float32)          # [G, D]
-    k = k_ref[0, ...].astype(jnp.float32)          # [bk, D]
-    v = v_ref[0, ...].astype(jnp.float32)          # [bk, D]
-    cache_len = len_ref[0]
+def _partial_softmax(q, k, v, kpos, cache_len, scale: float, window: int):
+    """One split-K partial: q [G,D], k/v [bk,D], kpos [G,bk] int32 ->
+    (m [G,1], l [G,1], acc [G,D]) fp32."""
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     ) * scale                                      # [G, bk]
-    kpos = sj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    s = jnp.where(kpos < cache_len, s, NEG_INF)
+    mask = kpos < cache_len
+    if window:
+        mask &= kpos >= cache_len - window
+    s = jnp.where(mask, s, NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)         # [G, 1]
     p = jnp.exp(s - m)
+    # a fully-masked block (all NEG_INF) must contribute l = 0, not bk:
+    # exp(NEG_INF - NEG_INF) = 1 per position would poison the denominator
+    p = jnp.where(mask, p, 0.0)
     l = jnp.sum(p, axis=-1, keepdims=True)
     acc = jax.lax.dot_general(
         p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )                                              # [G, D]
-    m_ref[0, 0, ...] = m
-    l_ref[0, 0, ...] = l
-    acc_ref[0, 0, ...] = acc
+    return m, l, acc
+
+
+def _write_neutral(m_ref, l_ref, acc_ref):
+    m_ref[0, 0, ...] = jnp.full_like(m_ref[0, 0], NEG_INF)
+    l_ref[0, 0, ...] = jnp.zeros_like(l_ref[0, 0])
+    acc_ref[0, 0, ...] = jnp.zeros_like(acc_ref[0, 0])
+
+
+def _combine_splits(m_p, l_p, acc_p, B, KV, G, D, dtype):
+    """Merge split-K partials [B*KV, ns, G, ...] -> [B, H, D]."""
+    m_all = jnp.max(m_p, axis=1, keepdims=True)
+    w = jnp.exp(m_p - m_all)
+    l_tot = jnp.sum(l_p * w, axis=1)
+    acc = jnp.sum(acc_p * w, axis=1)
+    out = acc / jnp.maximum(l_tot, 1e-30)
+    return out.reshape(B, KV * G, D).astype(dtype)
+
+
+def _dec_kernel(len_ref, q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref, *,
+                scale: float, block_k: int, window: int, kv: int):
+    bh = pl.program_id(0)
+    sj = pl.program_id(1)
+    cache_len = len_ref[bh // kv]
+    lo = sj * block_k
+    live = lo < cache_len
+    if window:
+        live = jnp.logical_and(live, lo + block_k > cache_len - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, ...].astype(jnp.float32)          # [G, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # [bk, D]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        kpos = lo + jax.lax.broadcasted_iota(
+            jnp.int32, (q.shape[0], block_k), 1)
+        m, l, acc = _partial_softmax(q, k, v, kpos, cache_len, scale, window)
+        m_ref[0, 0, ...] = m
+        l_ref[0, 0, ...] = l
+        acc_ref[0, 0, ...] = acc
+
+    @pl.when(jnp.logical_not(live))
+    def _skip():  # split-K block entirely outside the valid prefix
+        _write_neutral(m_ref, l_ref, acc_ref)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_k", "interpret")
+    jax.jit, static_argnames=("window", "block_k", "interpret")
 )
 def decode_attention(
-    q: jnp.ndarray,        # [B, H, D]
-    k: jnp.ndarray,        # [B, KV, S, D]
+    q: jnp.ndarray,          # [B, H, D]
+    k: jnp.ndarray,          # [B, S, KV, D]  (cache-native layout)
     v: jnp.ndarray,
-    cache_len: jnp.ndarray,  # [] int32
+    cache_len: jnp.ndarray,  # [] or [B] int32
     *,
+    window: int = 0,
     block_k: int = 512,
     interpret: bool = False,
 ) -> jnp.ndarray:
     B, H, D = q.shape
-    KV, S = k.shape[1], k.shape[2]
+    S, KV = k.shape[1], k.shape[2]
     G = H // KV
     scale = 1.0 / math.sqrt(D)
     block_k = min(block_k, S)
-    ns = S // block_k
-    grid = (B * KV, ns)
+    ns = pl.cdiv(S, block_k)
+    if S % block_k:  # ragged tail: fall back to one block (S is max_len —
+        block_k = S  # always a power-of-two bucket on the serving path)
+        ns = 1
 
     q_r = q.reshape(B, KV, G, D).reshape(B * KV, G, D)
-    k_r = k.reshape(B * KV, S, D)
-    v_r = v.reshape(B * KV, S, D)
-    clen = jnp.broadcast_to(cache_len, (1,)).astype(jnp.int32)
+    lens = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1), (B,))
 
-    m_p, l_p, acc_p = pl.pallas_call(
-        functools.partial(_dec_kernel, scale=scale, block_k=block_k),
-        grid=grid,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * KV, ns),
         in_specs=[
-            pl.BlockSpec(memory_space=pl.MemorySpace.ANY),
-            pl.BlockSpec((1, G, D), lambda bh, sj: (bh, 0, 0)),
-            pl.BlockSpec((1, block_k, D), lambda bh, sj: (bh, sj, 0)),
-            pl.BlockSpec((1, block_k, D), lambda bh, sj: (bh, sj, 0)),
+            pl.BlockSpec((1, G, D), lambda bh, sj, lr: (bh, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, D),
+                         lambda bh, sj, lr: (bh // KV, sj, bh % KV, 0)),
+            pl.BlockSpec((1, block_k, 1, D),
+                         lambda bh, sj, lr: (bh // KV, sj, bh % KV, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, G, 1), lambda bh, sj: (bh, sj, 0, 0)),
-            pl.BlockSpec((1, 1, G, 1), lambda bh, sj: (bh, sj, 0, 0)),
-            pl.BlockSpec((1, 1, G, D), lambda bh, sj: (bh, sj, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda bh, sj, lr: (bh, sj, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda bh, sj, lr: (bh, sj, 0, 0)),
+            pl.BlockSpec((1, 1, G, D), lambda bh, sj, lr: (bh, sj, 0, 0)),
         ],
+    )
+    m_p, l_p, acc_p = pl.pallas_call(
+        functools.partial(_dec_kernel, scale=scale, block_k=block_k,
+                          window=window, kv=KV),
+        grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((B * KV, ns, G, 1), jnp.float32),
             jax.ShapeDtypeStruct((B * KV, ns, G, 1), jnp.float32),
             jax.ShapeDtypeStruct((B * KV, ns, G, D), jnp.float32),
         ],
         interpret=interpret,
-    )(clen, q_r, k_r, v_r)
+    )(lens, q_r, k, v)
+    return _combine_splits(m_p, l_p, acc_p, B, KV, G, D, q.dtype)
 
-    # cross-split combine (tiny: [B*KV, ns, G, ...])
-    m_all = jnp.max(m_p, axis=1, keepdims=True)
-    w = jnp.exp(m_p - m_all)
-    l_tot = jnp.sum(l_p * w, axis=1)
-    acc = jnp.sum(acc_p * w, axis=1)
-    out = acc / jnp.maximum(l_tot, 1e-30)
-    return out.reshape(B, KV * G, D).astype(q.dtype)
+
+def _dec_paged_kernel(len_ref, bt_ref, q_ref, k_ref, v_ref,
+                      m_ref, l_ref, acc_ref, *,
+                      scale: float, page_size: int, window: int, kv: int):
+    bh = pl.program_id(0)
+    sj = pl.program_id(1)
+    cache_len = len_ref[bh // kv]
+    lo = sj * page_size
+    live = lo < cache_len
+    if window:
+        live = jnp.logical_and(live, lo + page_size > cache_len - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, ...].astype(jnp.float32)          # [G, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # [page, D]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        kpos = lo + jax.lax.broadcasted_iota(
+            jnp.int32, (q.shape[0], page_size), 1)
+        m, l, acc = _partial_softmax(q, k, v, kpos, cache_len, scale, window)
+        m_ref[0, 0, ...] = m
+        l_ref[0, 0, ...] = l
+        acc_ref[0, 0, ...] = acc
+
+    @pl.when(jnp.logical_not(live))
+    def _skip():  # page past the valid prefix (incl. unallocated sentinels)
+        _write_neutral(m_ref, l_ref, acc_ref)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "interpret")
+)
+def decode_attention_paged(
+    q: jnp.ndarray,            # [B, H, D]
+    k_pages: jnp.ndarray,      # [num_pages, page_size, KV, D]  shared pool
+    v_pages: jnp.ndarray,
+    block_table: jnp.ndarray,  # [B, max_pages] int32 (sentinel >= num_pages
+    cache_len: jnp.ndarray,    #   marks unallocated logical pages)
+    *,
+    window: int = 0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, D = q.shape
+    num_pages, page_size, KV, _ = k_pages.shape
+    max_pages = block_table.shape[1]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+
+    q_r = q.reshape(B, KV, G, D).reshape(B * KV, G, D)
+    lens = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1), (B,))
+    # clamp sentinel entries in-range: they only ever address positions at
+    # or past cache_len, which the in-kernel mask discards
+    bt = jnp.clip(block_table.astype(jnp.int32), 0, num_pages - 1)
+
+    def page_map(bh, sj, lr, btr):
+        # gather the physical page through the block table (the paged read)
+        return (btr[bh // KV, sj], 0, bh % KV, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B * KV, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, G, D), lambda bh, sj, lr, btr: (bh, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, D), page_map),
+            pl.BlockSpec((1, page_size, 1, D), page_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, 1), lambda bh, sj, lr, btr: (bh, sj, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda bh, sj, lr, btr: (bh, sj, 0, 0)),
+            pl.BlockSpec((1, 1, G, D), lambda bh, sj, lr, btr: (bh, sj, 0, 0)),
+        ],
+    )
+    m_p, l_p, acc_p = pl.pallas_call(
+        functools.partial(_dec_paged_kernel, scale=scale,
+                          page_size=page_size, window=window, kv=KV),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B * KV, max_pages, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B * KV, max_pages, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B * KV, max_pages, G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, bt, q_r, k_pages, v_pages)
+    return _combine_splits(m_p, l_p, acc_p, B, KV, G, D, q.dtype)
 
 
 def _dec_kernel_shapes():  # for docs/tests

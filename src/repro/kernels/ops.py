@@ -38,13 +38,49 @@ def flash_attention(q, k, v, *, causal=True, impl: str = "auto", **kw):
     return _ref.flash_attention_ref(q, k, v, causal=causal)
 
 
-def decode_attention(q, k, v, cache_len, *, impl: str = "auto", **kw):
-    mode = _resolve(impl)
+def _resolve_decode(impl: str) -> str:
+    """``auto`` = the Pallas flash-decode kernel on TPU, the jnp oracle
+    elsewhere: XLA:CPU vectorizes the oracle's einsum, while emulated
+    Pallas pays per-grid-program interpreter overhead that grows with
+    ``slots x kv_heads x blocks`` — a measured 2-5x decode-step
+    regression at 16 slots on the CPU container.  ``impl="interpret"``
+    stays explicitly selectable (the kernel lowers to plain XLA under
+    ``interpret=True``) and the CI parity suite + decode microbench run
+    it on every PR, so the kernel path is exercised without TPUs."""
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    if impl not in ("pallas", "interpret", "ref"):
+        raise ValueError(f"unknown decode impl {impl!r}: "
+                         f"expected auto|pallas|interpret|ref")
+    return impl
+
+
+def decode_attention(q, k, v, cache_len, *, window: int = 0,
+                     impl: str = "auto", **kw):
+    """q [B,H,D]; k,v [B,S,KV,D]; cache_len [] or [B] int32 -> [B,H,D]."""
+    mode = _resolve_decode(impl)
     if mode == "pallas":
-        return _dec.decode_attention(q, k, v, cache_len, **kw)
+        return _dec.decode_attention(q, k, v, cache_len, window=window, **kw)
     if mode == "interpret":
-        return _dec.decode_attention(q, k, v, cache_len, interpret=True, **kw)
-    return _ref.decode_attention_ref(q, k, v, cache_len)
+        return _dec.decode_attention(q, k, v, cache_len, window=window,
+                                     interpret=True, **kw)
+    return _ref.decode_attention_ref(q, k, v, cache_len, window=window)
+
+
+def decode_attention_paged(q, k_pages, v_pages, block_table, cache_len, *,
+                           window: int = 0, impl: str = "auto", **kw):
+    """q [B,H,D]; pools [num_pages,page_size,KV,D]; block_table [B,max_pages]
+    int32 (sentinel >= num_pages = unallocated); cache_len [B] -> [B,H,D]."""
+    mode = _resolve_decode(impl)
+    if mode == "pallas":
+        return _dec.decode_attention_paged(
+            q, k_pages, v_pages, block_table, cache_len, window=window, **kw)
+    if mode == "interpret":
+        return _dec.decode_attention_paged(
+            q, k_pages, v_pages, block_table, cache_len, window=window,
+            interpret=True, **kw)
+    return _ref.decode_attention_paged_ref(
+        q, k_pages, v_pages, block_table, cache_len, window=window)
 
 
 def rmsnorm(x, w, *, eps: float = 1e-5, impl: str = "auto", **kw):

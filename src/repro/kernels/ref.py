@@ -23,18 +23,54 @@ def flash_attention_ref(q, k, v, *, causal: bool = True) -> jnp.ndarray:
     return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
 
 
-def decode_attention_ref(q, k, v, cache_len) -> jnp.ndarray:
-    """q [B,H,D]; k,v [B,KV,S,D] -> [B,H,D]."""
+def decode_attention_ref(q, k, v, cache_len, *, window: int = 0) -> jnp.ndarray:
+    """q [B,H,D]; k,v [B,S,KV,D] (cache-native) -> [B,H,D].
+
+    ``cache_len`` is [] or [B] int32 — a [B] vector gives each batch row
+    its own valid prefix (the continuous-batching slot cache).  ``window``
+    > 0 additionally masks positions before ``cache_len - window``.
+
+    The cache is sequence-sharded over the model axis (flash-decoding
+    style); the contraction over S becomes a partial-softmax + psum under
+    GSPMD — the sharding constraint keeps the GQA-repeated heads on the
+    model axis instead of replicated.
+    """
+    from repro.distributed.sharding import constrain
+
     B, H, D = q.shape
-    KV, S = k.shape[1], k.shape[2]
+    S, KV = k.shape[1], k.shape[2]
     G = H // KV
-    kf = jnp.repeat(k, G, axis=1).astype(jnp.float32)
-    vf = jnp.repeat(v, G, axis=1).astype(jnp.float32)
-    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kf) / math.sqrt(D)
-    mask = jnp.arange(S)[None, None, :] < cache_len
+    cache_axes = ("cache_batch", "cache_seq", None, None)
+    kf = k if KV == H else constrain(jnp.repeat(k, G, axis=2), cache_axes)
+    vf = v if KV == H else constrain(jnp.repeat(v, G, axis=2), cache_axes)
+    s = jnp.einsum(
+        "bhd,bshd->bhs", q.astype(jnp.float32), kf.astype(jnp.float32)
+    ) / math.sqrt(D)
+    cl = jnp.asarray(cache_len)
+    if cl.ndim == 1:
+        cl = cl[:, None, None]  # per-row lengths broadcast over [B,H,S]
+    pos = jnp.arange(S)[None, None, :]
+    mask = pos < cl
+    if window:
+        mask &= pos >= cl - window
     s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bhk,bhkd->bhd", p, vf).astype(q.dtype)
+    return jnp.einsum(
+        "bhs,bshd->bhd", p, vf.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_paged_ref(q, k_pages, v_pages, block_table, cache_len,
+                               *, window: int = 0) -> jnp.ndarray:
+    """Paged oracle: gather each row's pages through its block table into a
+    contiguous [B, max_pages*page_size, KV, D] view, then run the masked
+    reference.  Sentinel (out-of-range) table entries are clamped — they
+    only address positions past ``cache_len``, which the mask discards."""
+    num_pages, page_size, KV, D = k_pages.shape
+    B, max_pages = block_table.shape
+    bt = jnp.clip(block_table.astype(jnp.int32), 0, num_pages - 1)
+    k = k_pages[bt].reshape(B, max_pages * page_size, KV, D)
+    v = v_pages[bt].reshape(B, max_pages * page_size, KV, D)
+    return decode_attention_ref(q, k, v, cache_len, window=window)
 
 
 def rmsnorm_ref(x, w, *, eps: float = 1e-5) -> jnp.ndarray:

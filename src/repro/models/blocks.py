@@ -235,34 +235,48 @@ def chunked_attention(
     return out.astype(q.dtype)
 
 
-def decode_attention_ref(q, k_cache, v_cache, cache_len, *, window: int = 0):
-    """Single-step decode. q: [B,1,H,D]; caches: [B,Smax,KV,D];
-    cache_len: [] or [B] int32 — number of valid positions (including
-    current).  A [B] vector gives each batch row its own valid prefix —
-    the continuous-batching slot cache, where every slot is at a
-    different point in its sequence.
+def _decode_attn(cfg, q, k_cache, v_cache, cache_len, *, window: int = 0):
+    """Single-step decode through the kernel dispatch (kernels/ops.py):
+    Pallas flash-decode on TPU, interpret-mode Pallas elsewhere, the
+    GSPMD-sharded jnp oracle under ``cfg.decode_impl="ref"``.
 
-    The cache is sequence-sharded over the model axis (flash-decoding style);
-    the contraction over S becomes a partial-softmax + psum under GSPMD."""
-    B, _, H, D = q.shape
-    cache_axes = ("cache_batch", "cache_seq", None, None)
-    kf = _repeat_kv(k_cache, H, cache_axes)
-    vf = _repeat_kv(v_cache, H, cache_axes)
-    scale = 1.0 / math.sqrt(D)
-    s = jnp.einsum(
-        "bhd,bshd->bhs", q[:, 0], kf, preferred_element_type=jnp.float32
-    ) * scale
-    pos = jnp.arange(kf.shape[1])
-    cl = jnp.asarray(cache_len)
-    if cl.ndim == 1:
-        cl = cl[:, None, None]  # per-row lengths broadcast over [B,H,S]
-    mask = pos[None, None, :] < cl
-    if window:
-        mask &= pos[None, None, :] >= (cl - window)
-    s = jnp.where(mask, s, _NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhs,bshd->bhd", p.astype(vf.dtype), vf)
+    q: [B,1,H,D]; caches: [B,Smax,KV,D]; cache_len: [] or [B] int32 —
+    number of valid positions (including current).  A [B] vector gives
+    each batch row its own valid prefix — the continuous-batching slot
+    cache, where every slot is at a different point in its sequence."""
+    from repro.kernels import ops
+
+    o = ops.decode_attention(q[:, 0], k_cache, v_cache, cache_len,
+                             window=window, impl=cfg.decode_impl)
     return o[:, None].astype(q.dtype)
+
+
+def _paged_decode_attn(cfg, q, k_pages, v_pages, block_table, cache_len):
+    """Paged decode: K/V gathered from a shared page pool through the
+    per-row block table (see kernels/decode_attention.py).  q: [B,1,H,D];
+    pools: [num_pages, page_size, KV, D]; block_table: [B, max_pages]."""
+    from repro.kernels import ops
+
+    o = ops.decode_attention_paged(q[:, 0], k_pages, v_pages, block_table,
+                                   cache_len, impl=cfg.decode_impl)
+    return o[:, None].astype(q.dtype)
+
+
+def _paged_append(pages, block_table, idx, row_vals):
+    """Scatter one new position per row into the shared page pool.
+    ``idx`` [B] is each row's append position; unallocated / out-of-range
+    logical pages hit the sentinel (>= num_pages) and the write drops."""
+    num_pages, page_size = pages.shape[0], pages.shape[1]
+    max_pages = block_table.shape[1]
+    rows = jnp.arange(block_table.shape[0])
+    lp = idx // page_size
+    off = idx % page_size
+    phys = jnp.where(
+        lp < max_pages,
+        block_table[rows, jnp.minimum(lp, max_pages - 1)],
+        num_pages,
+    )
+    return pages.at[phys, off].set(row_vals.astype(pages.dtype), mode="drop")
 
 
 # ---------------------------------------------------------------------------
@@ -320,7 +334,28 @@ def attn_apply(
         else:
             k = _rope_or_mrope(cfg, k, positions)
     new_cache = None
-    if cache is not None and is_self:
+    if cache is not None and is_self and "k_pages" in cache:
+        # paged decode (continuous batching): each row appends into its
+        # block-table page at its own length, attention gathers K/V
+        # through the table — no contiguous per-slot rows exist
+        if k.shape[1] > 1:
+            raise NotImplementedError(
+                "paged prefill is not supported: prefill writes a "
+                "contiguous scratch cache which the engine packs into "
+                "pages (page-aligned chunks)")
+        if window:
+            raise NotImplementedError(
+                "windowed attention over a paged cache needs ring-aware "
+                "page recycling; the engine restricts paged serving to "
+                "full-attention blocks")
+        idx = jnp.asarray(cache["len"])
+        bt = cache["block_table"]
+        k_pages = _paged_append(cache["k_pages"], bt, idx, k[:, 0])
+        v_pages = _paged_append(cache["v_pages"], bt, idx, v[:, 0])
+        new_cache = {"k_pages": k_pages, "v_pages": v_pages,
+                     "block_table": bt, "len": idx + 1}
+        o = _paged_decode_attn(cfg, q, k_pages, v_pages, bt, idx + 1)
+    elif cache is not None and is_self:
         S = k.shape[1]
         slots_n = cache["k"].shape[1]
         if S > 1:
@@ -359,7 +394,7 @@ def attn_apply(
                 v[:, 0].astype(cache["v"].dtype), mode="drop")
             new_cache = {"k": k_cache, "v": v_cache, "len": idx + 1}
             lens = jnp.minimum(idx + 1, slots_n) if window else idx + 1
-            o = decode_attention_ref(q, k_cache, v_cache, lens, window=0)
+            o = _decode_attn(cfg, q, k_cache, v_cache, lens)
         else:
             # decode: append to cache (ring-buffer for windowed attention)
             idx = cache["len"]
@@ -369,11 +404,13 @@ def attn_apply(
             new_cache = {"k": k_cache, "v": v_cache, "len": idx + 1}
             if window:
                 # ring buffer of exactly `window` slots: all valid once warm
-                o = decode_attention_ref(q, k_cache, v_cache, jnp.minimum(idx + 1, k_cache.shape[1]), window=0)
+                o = _decode_attn(cfg, q, k_cache, v_cache,
+                                 jnp.minimum(idx + 1, k_cache.shape[1]))
             else:
-                o = decode_attention_ref(q, k_cache, v_cache, idx + 1, window=0)
+                o = _decode_attn(cfg, q, k_cache, v_cache, idx + 1)
     elif cache is not None and not is_self:
-        o = decode_attention_ref(q, cache["xk"], cache["xv"], cache["xlen"], window=0)
+        o = _decode_attn(cfg, q, cache["xk"], cache["xv"],
+                         jnp.asarray(cache["xlen"], jnp.int32))
         new_cache = cache
     else:
         o = chunked_attention(
@@ -450,6 +487,29 @@ def mla_apply(
         kpe_c = jax.lax.dynamic_update_slice_in_dim(cache["k_pe"], k_pe[:, :, 0, :].astype(cache["k_pe"].dtype), 0, axis=1)
         new_cache = {"c_kv": ckv_c, "k_pe": kpe_c, "len": S}
         o = _mla_full_attention(cfg, params, q_nope, q_pe, c_kv, k_pe, cdt)
+    elif cache is not None and "ckv_pages" in cache:
+        # paged decode: latents append into the shared page pool through
+        # the block table, then gather (tiny: rank + rope dims only),
+        # expand per head, and attend via the vector-length kernel
+        if S > 1:
+            raise NotImplementedError(
+                "paged prefill is not supported: prefill writes a "
+                "contiguous scratch cache which the engine packs into "
+                "pages (page-aligned chunks)")
+        idx = jnp.asarray(cache["len"])
+        bt = cache["block_table"]
+        ckv_pages = _paged_append(cache["ckv_pages"], bt, idx, c_kv[:, 0])
+        kpe_pages = _paged_append(cache["kpe_pages"], bt, idx,
+                                  k_pe[:, 0, 0, :])
+        new_cache = {"ckv_pages": ckv_pages, "kpe_pages": kpe_pages,
+                     "block_table": bt, "len": idx + 1}
+        num_pages, page = ckv_pages.shape[0], ckv_pages.shape[1]
+        btc = jnp.clip(bt, 0, num_pages - 1)
+        mp = bt.shape[1]
+        ckv_c = ckv_pages[btc].reshape(B, mp * page, ckv_pages.shape[-1])
+        kpe_c = kpe_pages[btc].reshape(B, mp * page, kpe_pages.shape[-1])
+        o = _mla_expanded_decode(cfg, params, q_nope, q_pe, ckv_c, kpe_c,
+                                 idx + 1, cdt)
     elif cache is not None:
         idx = jnp.asarray(cache["len"])
         if idx.ndim == 1:
@@ -463,24 +523,36 @@ def mla_apply(
             ckv_c = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), idx, axis=1)
             kpe_c = jax.lax.dynamic_update_slice_in_dim(cache["k_pe"], k_pe[:, :, 0, :].astype(cache["k_pe"].dtype), idx, axis=1)
         new_cache = {"c_kv": ckv_c, "k_pe": kpe_c, "len": idx + 1}
-        # naive (baseline) decode: expand latents to full K/V then attend.
-        k_nope = jnp.einsum("bsr,rhk->bshk", ckv_c.astype(cdt), params["wk_b"].astype(cdt))
-        v_full = jnp.einsum("bsr,rhk->bshk", ckv_c.astype(cdt), params["wv_b"].astype(cdt))
-        scale = 1.0 / math.sqrt(nd + rd)
-        s = (
-            jnp.einsum("bhk,bshk->bhs", q_nope[:, 0].astype(jnp.float32), k_nope.astype(jnp.float32))
-            + jnp.einsum("bhk,bsk->bhs", q_pe[:, 0].astype(jnp.float32), kpe_c.astype(jnp.float32))
-        ) * scale
-        pos = jnp.arange(ckv_c.shape[1])
-        cl = (idx + 1)[:, None, None] if idx.ndim == 1 else idx + 1
-        s = jnp.where(pos[None, None, :] < cl, s, _NEG_INF)
-        p = jax.nn.softmax(s, axis=-1)
-        o = jnp.einsum("bhs,bshk->bhk", p.astype(cdt), v_full)[:, None]
+        o = _mla_expanded_decode(cfg, params, q_nope, q_pe, ckv_c, kpe_c,
+                                 idx + 1, cdt)
     else:
         o = _mla_full_attention(cfg, params, q_nope, q_pe, c_kv, k_pe, cdt)
     y = jnp.einsum("bshk,hkd->bsd", o.astype(cdt), params["wo"].astype(cdt))
     y = _checkpoint_name(y, "block_out")
     return x + y.astype(x.dtype), new_cache
+
+
+def _mla_expanded_decode(cfg, params, q_nope, q_pe, ckv_c, kpe_c, lens, cdt):
+    """MLA single-step decode: expand cached latents to full K/V per head
+    and run the shared decode kernel (KV == H after expansion, so the GQA
+    group is 1).  V is zero-padded to the qk head dim for the kernel, then
+    trimmed — padded columns contribute exact zeros."""
+    B, Sc = ckv_c.shape[0], ckv_c.shape[1]
+    H = q_nope.shape[2]
+    nd, rd, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv_c.astype(cdt),
+                        params["wk_b"].astype(cdt))
+    v_full = jnp.einsum("bsr,rhk->bshk", ckv_c.astype(cdt),
+                        params["wv_b"].astype(cdt))
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kpe_c[:, :, None, :].astype(k_nope.dtype),
+                                  (B, Sc, H, rd))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_pe], axis=-1)  # [B,1,H,nd+rd]
+    if vd < nd + rd:
+        v_pad = jnp.pad(v_full, ((0, 0), (0, 0), (0, 0), (0, nd + rd - vd)))
+    else:
+        v_pad = v_full
+    return _decode_attn(cfg, q_full, k_full, v_pad, lens)[..., :vd]
 
 
 def _mla_full_attention(cfg, params, q_nope, q_pe, c_kv, k_pe, cdt):

@@ -126,12 +126,73 @@ def _temporal_cache_specs(kind: str, cfg: ModelConfig, batch: int, max_len: int)
     raise ValueError(kind)
 
 
-def _pack_cache(kind: str, raw: Dict, length) -> Dict:
-    """Join declared cache arrays with the runtime length scalar into the
-    structure the block-apply functions expect."""
+def _temporal_paged_cache_specs(kind: str, cfg: ModelConfig,
+                                num_pages: int, page_size: int):
+    """Paged serving cache: one shared page pool per layer (``[num_pages,
+    page_size, ...]``), addressed through a per-slot block table that
+    lives OUTSIDE the cache tree (it is shared by every layer — all
+    layers append at the same positions).  Attention-family kinds only:
+    recurrent state caches have no sequence axis to page."""
+    cdt = cfg.compute_dtype
+    if kind == "attn":
+        _, KV = cfg.padded_gqa()
+        return {
+            "k_pages": Param((num_pages, page_size, KV, cfg.qk_head_dim),
+                             ("cache_seq", None, "cache_heads", None),
+                             dtype=cdt, init="zeros"),
+            "v_pages": Param((num_pages, page_size, KV, cfg.head_dim),
+                             ("cache_seq", None, "cache_heads", None),
+                             dtype=cdt, init="zeros"),
+        }
+    if kind == "mla":
+        return {
+            "ckv_pages": Param((num_pages, page_size, cfg.kv_lora_rank),
+                               ("cache_seq", None, None), dtype=cdt,
+                               init="zeros"),
+            "kpe_pages": Param((num_pages, page_size, cfg.rope_head_dim),
+                               ("cache_seq", None, None), dtype=cdt,
+                               init="zeros"),
+        }
+    raise NotImplementedError(
+        f"paged KV cache supports full-attention blocks only, got {kind!r}")
+
+
+def lm_paged_cache_specs(cfg: ModelConfig, num_pages: int,
+                         page_size: int) -> Dict[str, Any]:
+    head, unit, reps, tail = block_pattern(cfg)
+    return {
+        "head_layers": {
+            f"h{i}": _temporal_paged_cache_specs(tk, cfg, num_pages, page_size)
+            for i, (tk, _) in enumerate(head)
+        },
+        "unit": _stack(
+            {f"b{i}": _temporal_paged_cache_specs(tk, cfg, num_pages,
+                                                  page_size)
+             for i, (tk, _) in enumerate(unit)},
+            reps,
+        ),
+        "tail_layers": {
+            f"t{i}": _temporal_paged_cache_specs(tk, cfg, num_pages,
+                                                 page_size)
+            for i, (tk, _) in enumerate(tail)
+        },
+    }
+
+
+def _pack_cache(kind: str, raw: Dict, length, block_table=None) -> Dict:
+    """Join declared cache arrays with the runtime length scalar (and, for
+    paged caches, the shared block table) into the structure the
+    block-apply functions expect."""
     if kind in ("attn", "local"):
+        if "k_pages" in raw:
+            return {"k_pages": raw["k_pages"], "v_pages": raw["v_pages"],
+                    "block_table": block_table, "len": length}
         return {"k": raw["k"], "v": raw["v"], "len": length}
     if kind == "mla":
+        if "ckv_pages" in raw:
+            return {"ckv_pages": raw["ckv_pages"],
+                    "kpe_pages": raw["kpe_pages"],
+                    "block_table": block_table, "len": length}
         return {"c_kv": raw["c_kv"], "k_pe": raw["k_pe"], "len": length}
     if kind == "rglru":
         return {"conv": raw["conv"], "h": raw["h"]}
@@ -144,8 +205,13 @@ def _pack_cache(kind: str, raw: Dict, length) -> Dict:
 
 def _unpack_cache(kind: str, cache: Dict) -> Dict:
     if kind in ("attn", "local"):
+        if "k_pages" in cache:
+            return {"k_pages": cache["k_pages"], "v_pages": cache["v_pages"]}
         return {"k": cache["k"], "v": cache["v"]}
     if kind == "mla":
+        if "ckv_pages" in cache:
+            return {"ckv_pages": cache["ckv_pages"],
+                    "kpe_pages": cache["kpe_pages"]}
         return {"c_kv": cache["c_kv"], "k_pe": cache["k_pe"]}
     if kind == "rglru":
         return {"conv": cache["conv"], "h": cache["h"]}
@@ -228,6 +294,7 @@ def lm_apply(
     cache: Optional[Dict] = None,
     cache_len=None,
     *,
+    block_table=None,
     remat: bool = True,
     last_only: bool = False,
 ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
@@ -238,6 +305,9 @@ def lm_apply(
     scalar cache_len — the full-sequence K/V is written into the cache in
     one forward).  A [B]-vector cache_len runs per-slot decode: every row
     appends and attends at its own length (continuous batching).
+    ``block_table`` ([B, max_pages] int32) rides alongside a *paged* cache
+    (``lm_paged_cache_specs``): it is shared by every layer, so it threads
+    through here rather than living in the per-layer cache tree.
     """
     head, unit, reps, tail = block_pattern(cfg)
     if inputs.ndim == 2:
@@ -259,7 +329,8 @@ def lm_apply(
     new_cache: Dict[str, Any] = {"head_layers": {}, "tail_layers": {}}
 
     def run_layer(tk, ck, p, x, c):
-        cc = _pack_cache(tk, c, cache_len) if c is not None else None
+        cc = (_pack_cache(tk, c, cache_len, block_table)
+              if c is not None else None)
         x, nc, aux = _layer_apply(cfg, tk, ck, p, x, positions, cc)
         return x, (_unpack_cache(tk, nc) if nc is not None else None), aux
 

@@ -1,12 +1,17 @@
-"""Continuous-batching serving subsystem (slot-based KV cache engine).
+"""Continuous-batching serving subsystem (paged KV cache engine).
 
 ``ServeEngine`` + ``Request`` implement the paper's inference task kind as
-a long-running *service* on the pilot runtime: batched prefill into a
-``[max_slots, max_len]`` cache, one fused decode per step over all
-occupied slots, admission between steps, and checkpoint/yield/resume
-under priority preemption (see ``core/task.py`` ServiceControl).
+a long-running *service* on the pilot runtime: batched prefill packed
+page-aligned into a shared page pool addressed by per-slot block tables
+(``kv_layout="contiguous"`` keeps the PR-3 ``[max_slots, max_len]`` rows
+as the benchmark baseline), one fused flash-decode per step over all
+occupied slots (``kernels/ops.decode_attention{_paged}``), per-slot
+temperature/top-k sampling with seeded PRNG streams, admission between
+steps, and checkpoint/yield/resume under priority preemption (see
+``core/task.py`` ServiceControl).
 """
 from repro.serve.engine import ServeEngine
 from repro.serve.request import Request, RequestState
+from repro.serve.sampling import sample_tokens
 
-__all__ = ["ServeEngine", "Request", "RequestState"]
+__all__ = ["ServeEngine", "Request", "RequestState", "sample_tokens"]

@@ -31,14 +31,21 @@ _rid = itertools.count()
 class Request:
     """One generation request.
 
-    ``prompt`` is a 1-D int32 token array; generation is greedy and stops
-    at ``max_new_tokens``, on ``stop_token``, or when the slot's KV cache
-    is full — whichever comes first.
+    ``prompt`` is a 1-D int32 token array; generation stops at
+    ``max_new_tokens``, on ``stop_token``, or when the slot's KV cache is
+    full — whichever comes first.  Sampling is greedy by default
+    (``temperature=0``); ``temperature > 0`` samples from the
+    temperature-scaled distribution, optionally top-k filtered, from a
+    per-request stream seeded by ``seed`` (reproducible across engine
+    preemption/resume — the engine checkpoints the slot's PRNG key).
     """
 
     prompt: np.ndarray
     max_new_tokens: int = 16
     stop_token: Optional[int] = None
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
     rid: str = dataclasses.field(
         default_factory=lambda: f"req.{next(_rid):06d}")
     state: RequestState = RequestState.QUEUED

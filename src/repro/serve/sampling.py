@@ -1,0 +1,53 @@
+"""Per-slot token sampling for the ServeEngine.
+
+One jittable function covers every slot in the fused decode batch:
+temperature and top-k are *per-row* vectors (each request carries its
+own), and randomness comes from per-slot threefry keys that the engine
+threads through checkpoint/restore — a preempted-and-resumed engine
+replays exactly the stream an uninterrupted one would have produced.
+
+Greedy (``temperature <= 0``, the default) takes the argmax of the raw
+logits — bit-identical to the pre-sampling engine, regardless of which
+other slots in the batch are sampling.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_slot_key(seed: int) -> np.ndarray:
+    """Fresh per-request threefry key (uint32[2]) from a request seed —
+    the same (hi, lo) packing ``jax.random.PRNGKey`` produces, built on
+    the host so admission never pays a device round-trip per request."""
+    return np.array([(seed >> 32) & 0xFFFFFFFF, seed & 0xFFFFFFFF],
+                    np.uint32)
+
+
+def sample_tokens(logits: jnp.ndarray,      # [B, V]
+                  keys: jnp.ndarray,        # [B, 2] uint32 threefry keys
+                  temperature: jnp.ndarray,  # [B] f32 (<=0 -> greedy)
+                  top_k: jnp.ndarray):      # [B] int32 (0 -> no filter)
+    """Returns (tokens [B] int32, advanced keys [B, 2]).
+
+    Every row's key advances every call (whether or not it sampled), so a
+    slot's stream depends only on its own seed and step count — never on
+    which neighbours happen to share the fused batch.  Top-k keeps all
+    logits >= the k-th largest (ties may keep more than k).
+    """
+    V = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    pairs = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+    carry, use = pairs[:, 0], pairs[:, 1]
+    scaled = lf / jnp.maximum(temperature, 1e-6)[:, None]
+    kth = jnp.take_along_axis(
+        -jnp.sort(-lf, axis=-1),
+        jnp.clip(top_k - 1, 0, V - 1)[:, None], axis=-1)
+    keep = jnp.where((top_k > 0)[:, None], lf >= kth, True)
+    masked = jnp.where(keep, scaled, -jnp.inf)
+    gumbel = jax.vmap(lambda k: jax.random.gumbel(k, (V,)))(use)
+    sampled = jnp.argmax(masked + gumbel, axis=-1).astype(jnp.int32)
+    tokens = jnp.where(temperature > 0, sampled, greedy)
+    return tokens, carry.astype(jnp.uint32)

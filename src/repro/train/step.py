@@ -195,9 +195,12 @@ def make_prefill_step(cfg: ModelConfig, run_cfg: Optional[RunConfig] = None,
 
 
 def make_decode_step(cfg: ModelConfig, run_cfg: Optional[RunConfig] = None):
-    """One new token against a pre-filled KV cache."""
+    """One new token against a pre-filled KV cache.  ``block_table``
+    ([B, max_pages] int32) selects the paged-cache path: ``cache`` then
+    holds shared page pools (``lm_paged_cache_specs``) instead of
+    contiguous per-row caches."""
 
-    def decode_step(params, tokens, cache, cache_len):
+    def decode_step(params, tokens, cache, cache_len, block_table=None):
         if cfg.is_encoder_decoder:
             logits, new_cache = encdec.decode_step(cfg, params, tokens, cache, cache_len)
         else:
@@ -208,7 +211,8 @@ def make_decode_step(cfg: ModelConfig, run_cfg: Optional[RunConfig] = None):
                     cache_len[None, None, None], (Bsz, 1, 3)
                 ).astype(jnp.int32)
             logits, new_cache, _ = lm_apply(
-                cfg, params, tokens, positions, cache, cache_len, remat=False
+                cfg, params, tokens, positions, cache, cache_len,
+                block_table=block_table, remat=False
             )
         next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return next_token, logits, new_cache

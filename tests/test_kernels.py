@@ -51,18 +51,60 @@ def test_flash_attention_causality():
                                np.asarray(out2[:, :, :64]), atol=1e-5, rtol=1e-5)
 
 
+def _decode_inputs(B, H, KV, S, D, seed=0):
+    """Cache-native layout: q [B,H,D]; k, v [B,S,KV,D]."""
+    q = jax.random.normal(jax.random.PRNGKey(seed), (B, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(seed + 1), (B, S, KV, D))
+    v = jax.random.normal(jax.random.PRNGKey(seed + 2), (B, S, KV, D))
+    return q, k, v
+
+
+def _paged_inputs(B, H, KV, S, D, page, seed=0, scramble=True):
+    """Pool + scrambled block table covering [B, S] logical positions,
+    with spare pages left unused and sentinel entries appended."""
+    rng = np.random.default_rng(seed)
+    mp = S // page
+    num_pages = B * mp + 3  # spare pages: gather must ignore them
+    q = jax.random.normal(jax.random.PRNGKey(seed), (B, H, D))
+    kp = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                           (num_pages, page, KV, D))
+    vp = jax.random.normal(jax.random.PRNGKey(seed + 2),
+                           (num_pages, page, KV, D))
+    ids = (rng.permutation(num_pages)[:B * mp] if scramble
+           else np.arange(B * mp))
+    bt = jnp.asarray(ids.reshape(B, mp).astype(np.int32))
+    return q, kp, vp, bt, num_pages
+
+
+# -- vector-length (per-row [B] cache lengths) parity -----------------------
+
 @pytest.mark.parametrize("B,H,KV,S,D,bk", [
-    (2, 8, 2, 512, 64, 128),
-    (1, 4, 4, 256, 128, 64),
-    (4, 16, 1, 1024, 64, 256),
+    (2, 8, 2, 512, 64, 128),   # GQA 4x
+    (1, 4, 4, 256, 128, 64),   # MHA
+    (4, 16, 1, 1024, 64, 256),  # MQA
+    (2, 4, 4, 128, 48, 64),    # MLA-expanded layout (KV == H, qk dim 48)
 ])
 def test_decode_attention_matches_ref(B, H, KV, S, D, bk):
-    q = jax.random.normal(KEY, (B, H, D))
-    k = jax.random.normal(jax.random.PRNGKey(1), (B, KV, S, D))
-    v = jax.random.normal(jax.random.PRNGKey(2), (B, KV, S, D))
-    cl = jnp.asarray(S * 3 // 4, jnp.int32)
-    got = da.decode_attention(q, k, v, cl, block_k=bk, interpret=True)
-    want = ref.decode_attention_ref(q, k, v, cl)
+    q, k, v = _decode_inputs(B, H, KV, S, D)
+    for cl in (jnp.asarray(S * 3 // 4, jnp.int32),          # scalar
+               jnp.asarray(np.random.default_rng(B).integers(1, S + 1, B),
+                           jnp.int32)):                     # ragged [B]
+        got = da.decode_attention(q, k, v, cl, block_k=bk, interpret=True)
+        want = ref.decode_attention_ref(q, k, v, cl)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("window", [8, 64, 100])
+def test_decode_attention_windowed_matches_ref(window):
+    """Windowed/local masks ride the same per-row length logic: positions
+    outside [len - window, len) never contribute."""
+    B, H, KV, S, D = 3, 8, 2, 256, 32
+    q, k, v = _decode_inputs(B, H, KV, S, D, seed=3)
+    lens = jnp.asarray([S, S // 2, window + 1], jnp.int32)
+    got = da.decode_attention(q, k, v, lens, window=window, block_k=64,
+                              interpret=True)
+    want = ref.decode_attention_ref(q, k, v, lens, window=window)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                atol=2e-5, rtol=2e-5)
 
@@ -72,16 +114,93 @@ def test_decode_attention_matches_ref(B, H, KV, S, D, bk):
 def test_decode_attention_cache_len_property(cache_len):
     """Positions >= cache_len never contribute."""
     B, H, KV, S, D = 1, 2, 2, 256, 32
-    q = jax.random.normal(KEY, (B, H, D))
-    k = jax.random.normal(jax.random.PRNGKey(1), (B, KV, S, D))
-    v = jax.random.normal(jax.random.PRNGKey(2), (B, KV, S, D))
+    q, k, v = _decode_inputs(B, H, KV, S, D)
     cl = jnp.asarray(cache_len, jnp.int32)
     base = da.decode_attention(q, k, v, cl, block_k=64, interpret=True)
-    k2 = k.at[:, :, cache_len:].set(7.0)
-    v2 = v.at[:, :, cache_len:].set(-7.0)
+    k2 = k.at[:, cache_len:].set(7.0)
+    v2 = v.at[:, cache_len:].set(-7.0)
     got = da.decode_attention(q, k2, v2, cl, block_k=64, interpret=True)
     np.testing.assert_allclose(np.asarray(base), np.asarray(got),
                                atol=1e-5, rtol=1e-5)
+
+
+def test_decode_attention_rows_independent():
+    """A [B] length vector must mask each row independently: row i's
+    output equals a B=1 call at its own length."""
+    B, H, KV, S, D = 4, 8, 2, 128, 32
+    q, k, v = _decode_inputs(B, H, KV, S, D, seed=5)
+    lens = jnp.asarray([1, 37, 64, 128], jnp.int32)
+    got = da.decode_attention(q, k, v, lens, block_k=32, interpret=True)
+    for i in range(B):
+        solo = da.decode_attention(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                                   lens[i], block_k=32, interpret=True)
+        np.testing.assert_allclose(np.asarray(got[i]), np.asarray(solo[0]),
+                                   atol=1e-5, rtol=1e-5)
+
+
+# -- paged (block-table gather) parity --------------------------------------
+
+@pytest.mark.parametrize("B,H,KV,S,D,page", [
+    (2, 8, 2, 256, 64, 64),    # GQA 4x
+    (1, 4, 4, 128, 32, 32),    # MHA
+    (4, 16, 1, 512, 64, 128),  # MQA
+    (2, 4, 4, 128, 48, 32),    # MLA-expanded layout
+])
+def test_paged_decode_matches_ref(B, H, KV, S, D, page):
+    q, kp, vp, bt, _ = _paged_inputs(B, H, KV, S, D, page, seed=7)
+    lens = jnp.asarray(np.random.default_rng(B).integers(1, S + 1, B),
+                       jnp.int32)
+    got = da.decode_attention_paged(q, kp, vp, bt, lens, interpret=True)
+    want = ref.decode_attention_paged_ref(q, kp, vp, bt, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_decode_matches_contiguous():
+    """A paged cache whose gathered view equals a contiguous cache must
+    produce the contiguous kernel's output — including lengths that end
+    exactly on, one past, and one before a page boundary."""
+    B, H, KV, S, D, page = 3, 8, 2, 256, 32, 64
+    q, kp, vp, bt, _ = _paged_inputs(B, H, KV, S, D, page, seed=9)
+    mp = S // page
+    k = kp[bt].reshape(B, S, KV, D)
+    v = vp[bt].reshape(B, S, KV, D)
+    for lens in ([page, 2 * page, 3 * page],        # exactly on boundaries
+                 [page + 1, 2 * page - 1, S],       # straddling
+                 [1, page // 2, S - 1]):
+        cl = jnp.asarray(lens, jnp.int32)
+        got = da.decode_attention_paged(q, kp, vp, bt, cl, interpret=True)
+        want = da.decode_attention(q, k, v, cl, block_k=page, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_paged_decode_sentinel_entries_ignored():
+    """Unallocated logical pages carry a sentinel id (>= num_pages): any
+    such page sits at or past the row's length and must not contribute,
+    whatever garbage the clamped page holds."""
+    B, H, KV, S, D, page = 2, 4, 2, 256, 32, 64
+    q, kp, vp, bt, num_pages = _paged_inputs(B, H, KV, S, D, page, seed=11)
+    lens = jnp.asarray([page, 2 * page], jnp.int32)
+    base = da.decode_attention_paged(q, kp, vp, bt, lens, interpret=True)
+    bt_s = np.array(bt)
+    bt_s[0, 1:] = num_pages  # rows only keep their live-prefix pages
+    bt_s[1, 2:] = num_pages
+    got = da.decode_attention_paged(q, kp, vp, jnp.asarray(bt_s), lens,
+                                    interpret=True)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(got),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_paged_decode_windowed_matches_ref():
+    B, H, KV, S, D, page = 2, 8, 2, 256, 32, 64
+    q, kp, vp, bt, _ = _paged_inputs(B, H, KV, S, D, page, seed=13)
+    lens = jnp.asarray([S, S // 2 + 3], jnp.int32)
+    got = da.decode_attention_paged(q, kp, vp, bt, lens, window=48,
+                                    interpret=True)
+    want = ref.decode_attention_paged_ref(q, kp, vp, bt, lens, window=48)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
 
 
 @pytest.mark.parametrize("shape", [(32, 128), (4, 17, 256), (1, 512)])

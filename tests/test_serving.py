@@ -204,6 +204,191 @@ def test_continuous_beats_static_admission(params):
 
 
 # ---------------------------------------------------------------------------
+# paged KV cache: layout equivalence, page reuse, backpressure, checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_paged_matches_contiguous_streams(params):
+    """The paged engine (page pool + block tables) must emit exactly the
+    contiguous engine's greedy streams — the layout is invisible to the
+    math."""
+    rng = np.random.default_rng(10)
+    prompts = _prompts(rng, [4, 11, 7])
+    gens = [6, 3, 9]
+    outs = {}
+    for layout in ("paged", "contiguous"):
+        eng = ServeEngine(CFG32, RUN, max_slots=2, max_len=48, params=params,
+                          kv_layout=layout, page_size=8)
+        reqs = [eng.submit(p, max_new_tokens=g)
+                for p, g in zip(prompts, gens)]
+        eng.run_until_drained()
+        assert all(r.state is RequestState.DONE for r in reqs)
+        outs[layout] = [r.tokens for r in reqs]
+    assert outs["paged"] == outs["contiguous"]
+
+
+def test_paged_page_reuse_after_eviction(params):
+    """A pool far smaller than max_slots x max_len serves a stream of
+    requests because _finish_slot recycles pages: with 2 pages total only
+    one request fits at a time, yet all five complete (FIFO backpressure
+    holds the queue, never fails it)."""
+    eng = ServeEngine(CFG, RUN, max_slots=2, max_len=32, params=params,
+                      kv_layout="paged", page_size=8, num_pages=2)
+    rng = np.random.default_rng(11)
+    # prompt + generation stay within the 2 reserved pages (<= 16 slots)
+    reqs = [eng.submit(p, max_new_tokens=6)
+            for p in _prompts(rng, [5, 7, 4, 6, 5])]
+    eng.run_until_drained()
+    for r in reqs:
+        assert r.state is RequestState.DONE and len(r.tokens) == 6
+    stats = eng.stats()
+    assert stats["peak_pages"] <= 2
+    assert eng.pages_in_use() == 0
+    assert sorted(eng.free_pages) == [0, 1]
+    assert (eng.block_table == eng.num_pages).all()
+
+
+def test_paged_pool_exhaustion_fails_slot_then_recovers(params):
+    """Overcommit gone wrong: a sequence that outgrows the pool fails
+    with a page-pool error (never hangs), its pages return to the free
+    list, and later requests succeed."""
+    eng = ServeEngine(CFG, RUN, max_slots=1, max_len=64, params=params,
+                      kv_layout="paged", page_size=8, num_pages=2)
+    hog = eng.submit(np.arange(1, 7, dtype=np.int32), max_new_tokens=40)
+    eng.run_until_drained()
+    assert hog.state is RequestState.FAILED
+    assert "page pool exhausted" in hog.error
+    ok = eng.submit(np.arange(1, 7, dtype=np.int32), max_new_tokens=8)
+    eng.run_until_drained()
+    assert ok.state is RequestState.DONE and len(ok.tokens) == 8
+    assert eng.pages_in_use() == 0
+
+
+def test_paged_unservable_prompt_fails_fast(params):
+    """A prompt whose page requirement exceeds the whole pool can never
+    be admitted — it must fail immediately instead of livelocking the
+    FIFO queue (and everything behind it) forever."""
+    eng = ServeEngine(CFG, RUN, max_slots=1, max_len=64, params=params,
+                      kv_layout="paged", page_size=8, num_pages=2)
+    hog = eng.submit(np.arange(1, 22, dtype=np.int32), max_new_tokens=2)
+    ok = eng.submit(np.arange(1, 7, dtype=np.int32), max_new_tokens=4)
+    eng.run_until_drained()
+    assert hog.state is RequestState.FAILED and "pool" in hog.error
+    assert ok.state is RequestState.DONE and len(ok.tokens) == 4
+
+
+def test_paged_checkpoint_restore_roundtrip(params):
+    """checkpoint/restore round-trips the page pool, block tables, and
+    free list mid-generation: the resumed engine finishes with exactly
+    the uninterrupted streams."""
+    rng = np.random.default_rng(12)
+    prompts = _prompts(rng, [5, 9])
+    want = [_replay_generate(params, p, 10, 64, cfg=CFG32)[0]
+            for p in prompts]
+    eng = ServeEngine(CFG32, RUN, max_slots=2, max_len=64, params=params,
+                      kv_layout="paged", page_size=8)
+    reqs = [eng.submit(p, max_new_tokens=10) for p in prompts]
+    for _ in range(4):
+        eng.step()
+    state = eng.checkpoint()
+    eng._release_state()
+    assert eng.pages_in_use() == 0  # released engine holds nothing
+    eng.restore(state)
+    assert np.array_equal(eng.block_table, state["block_table"])
+    assert eng.free_pages == state["free_pages"]
+    eng.run_until_drained()
+    for r, w in zip(reqs, want):
+        assert r.state is RequestState.DONE
+        assert r.tokens == w, (r.tokens, w)
+
+
+def test_bucket_floor_and_retrace_stats(params):
+    """The prefill prompt bucket floor is 2 (an 8-floor padded every
+    small admission to shape 8), and the engine counts each fresh jit
+    shape in stats() so the bucketing/retrace tradeoff is observable."""
+    from repro.serve.engine import _bucket
+    assert _bucket(1) == 2 and _bucket(3) == 4 and _bucket(8) == 8
+    eng = ServeEngine(CFG, RUN, max_slots=2, max_len=64, params=params)
+    eng.submit(np.arange(1, 4, dtype=np.int32), max_new_tokens=2)
+    eng.run_until_drained()
+    first = eng.stats()["retraces"]
+    assert first >= 2  # one prefill shape + one decode bucket
+    eng.submit(np.arange(1, 4, dtype=np.int32), max_new_tokens=2)
+    eng.run_until_drained()
+    assert eng.stats()["retraces"] == first  # warm shapes: no retrace
+    eng.submit(np.arange(1, 25, dtype=np.int32), max_new_tokens=2)
+    eng.run_until_drained()
+    assert eng.stats()["retraces_prefill"] > 1  # new P bucket counted
+
+
+# ---------------------------------------------------------------------------
+# sampling: temperature / top-k / seeded per-slot streams
+# ---------------------------------------------------------------------------
+
+
+def test_sampling_seeded_reproducible(params):
+    """Same seed -> same sampled stream; different seed -> different (at
+    temperature 2 over a 256-vocab the 12-token collision odds are nil).
+    Streams depend only on the request's own seed, not batch placement."""
+    eng = ServeEngine(CFG32, RUN, max_slots=2, max_len=64, params=params)
+    prompt = np.arange(1, 7, dtype=np.int32)
+    a = eng.submit(prompt, max_new_tokens=12, temperature=2.0, seed=123)
+    b = eng.submit(prompt, max_new_tokens=12, temperature=2.0, seed=123)
+    c = eng.submit(prompt, max_new_tokens=12, temperature=2.0, seed=124)
+    eng.run_until_drained()
+    assert a.tokens == b.tokens
+    assert a.tokens != c.tokens
+
+
+def test_sampling_does_not_perturb_greedy_neighbors(params):
+    """A sampling request sharing the fused batch must not change a
+    greedy neighbour's stream — greedy stays bit-identical to isolated
+    token replay."""
+    rng = np.random.default_rng(13)
+    prompt = _prompts(rng, [6])[0]
+    want, _ = _replay_generate(params, prompt, 8, 64, cfg=CFG32)
+    eng = ServeEngine(CFG32, RUN, max_slots=2, max_len=64, params=params)
+    greedy = eng.submit(prompt, max_new_tokens=8)
+    eng.submit(_prompts(rng, [5])[0], max_new_tokens=8, temperature=1.5,
+               seed=7)
+    eng.run_until_drained()
+    assert greedy.tokens == want
+
+
+def test_sampling_top_k_one_is_argmax(params):
+    """top_k=1 collapses sampling to argmax whatever the temperature."""
+    prompt = np.arange(1, 8, dtype=np.int32)
+    eng = ServeEngine(CFG32, RUN, max_slots=1, max_len=64, params=params)
+    greedy = eng.submit(prompt, max_new_tokens=10)
+    eng.run_until_drained()
+    topk1 = eng.submit(prompt, max_new_tokens=10, temperature=3.0, top_k=1,
+                       seed=99)
+    eng.run_until_drained()
+    assert topk1.tokens == greedy.tokens
+
+
+def test_sampling_stream_survives_preemption(params):
+    """The per-slot PRNG keys ride the checkpoint: a preempted-and-resumed
+    sampled stream equals the uninterrupted one."""
+    prompt = np.arange(1, 8, dtype=np.int32)
+    ref_eng = ServeEngine(CFG32, RUN, max_slots=2, max_len=64, params=params)
+    ref_req = ref_eng.submit(prompt, max_new_tokens=12, temperature=1.0,
+                             seed=42)
+    ref_eng.run_until_drained()
+
+    eng = ServeEngine(CFG32, RUN, max_slots=2, max_len=64, params=params)
+    req = eng.submit(prompt, max_new_tokens=12, temperature=1.0, seed=42)
+    for _ in range(5):
+        eng.step()
+    state = eng.checkpoint()
+    eng._release_state()
+    eng.restore(state)
+    eng.run_until_drained()
+    assert req.state is RequestState.DONE
+    assert req.tokens == ref_req.tokens
+
+
+# ---------------------------------------------------------------------------
 # service stages on the runtime
 # ---------------------------------------------------------------------------
 
