@@ -1,0 +1,24 @@
+"""Static-analysis toolkit for the repro runtime.
+
+Three analysis passes plus one lint, each producing :class:`Finding`
+records that the CLI (``python -m repro.analysis``) diffs against a
+checked-in baseline (``analysis-baseline.json``):
+
+- ``locks``   — AST lock-discipline checker driven by ``# guarded-by:``
+  declarations on shared attributes (see :mod:`repro.analysis.locks`),
+  paired with a runtime lock-order recorder for tests
+  (:mod:`repro.analysis.lockorder`).
+- ``jit``     — call-graph walk rooted at every ``jax.jit``-ed function
+  flagging host syncs, Python branches on traced values, and unhashable
+  static args (:mod:`repro.analysis.jit_boundary`).
+- ``kernels`` — ``jax.eval_shape`` abstract evaluation of the
+  ``kernels/ops.py`` dispatch surface across the full config matrix and
+  both KV layouts, no accelerator required
+  (:mod:`repro.analysis.kernel_contracts`).
+- ``excepts`` — rejects new broad ``except Exception`` handlers outside
+  ``# noqa: BLE001``-annotated isolation boundaries
+  (:mod:`repro.analysis.excepts`).
+"""
+from repro.analysis.findings import Finding, load_baseline, write_baseline
+
+__all__ = ["Finding", "load_baseline", "write_baseline"]

@@ -101,29 +101,33 @@ class RemoteAgent:
         self.straggler_factor = straggler_factor
         self.straggler_min_s = straggler_min_s
         self.straggler_check_s = straggler_check_s
-        self._durations: Dict[str, List[float]] = {}
         # _result_lock guards task result/state transitions (primary vs
         # speculative twin); _cond guards the scheduling state below.
         self._result_lock = threading.Lock()
         self._cond = threading.Condition()
-        self._pending: List[Task] = []            # priority-ordered queue
-        self._running: Dict[str, Task] = {}       # primary uid -> task
-        self._spec: Dict[str, Tuple[str, Future]] = {}  # uid -> (lease uid, fut)
+        # straggler duration history lives with the scheduling state: its
+        # readers (_wait_timeout_locked / _check_stragglers_locked) run
+        # under _cond, so the writer must too (_on_worker_exit)
+        self._durations: Dict[str, List[float]] = {}  # guarded-by: _cond
+        self._pending: List[Task] = []  # guarded-by: _cond  (priority queue)
+        self._running: Dict[str, Task] = {}  # guarded-by: _cond  (uid -> task)
+        # uid -> (lease uid, fut)
+        self._spec: Dict[str, Tuple[str, Future]] = {}  # guarded-by: _cond
         self._seq = itertools.count()             # FIFO tiebreak within priority
-        self._order: Dict[str, int] = {}
+        self._order: Dict[str, int] = {}  # guarded-by: _cond
         # per-group quota state: quota caps, devices currently held per
         # group (speculative twins included), observed peaks, and an
         # auditable (time, group, delta, held-after) trace of every
         # grouped lease event
-        self._quotas: Dict[str, int] = {}
-        self._group_held: Dict[str, int] = {}
-        self._group_peak: Dict[str, int] = {}
-        self._lease_sizes: Dict[str, Tuple[Optional[str], int]] = {}
+        self._quotas: Dict[str, int] = {}  # guarded-by: _cond
+        self._group_held: Dict[str, int] = {}  # guarded-by: _cond
+        self._group_peak: Dict[str, int] = {}  # guarded-by: _cond
+        self._lease_sizes: Dict[str, Tuple[Optional[str], int]] = {}  # guarded-by: _cond
         self.lease_trace: Deque[Tuple[float, str, int, int]] = \
-            collections.deque(maxlen=lease_trace_limit)
+            collections.deque(maxlen=lease_trace_limit)  # guarded-by: _cond
         #: total preemption requests issued to service tasks (auditable)
-        self.preemption_requests = 0
-        self._closed = False
+        self.preemption_requests = 0  # guarded-by: _cond
+        self._closed = False  # guarded-by: _cond
         pilot.add_capacity_listener(self._wake)
         self._dispatcher = threading.Thread(
             target=self._dispatch_loop, name="rc-dispatcher", daemon=True)
@@ -480,10 +484,9 @@ class RemoteAgent:
                 task.error = None  # a retry succeeded: stale error must not
                 # make error-checking callers reject a DONE task
                 task.state = TaskState.DONE
-                if not d.service:
-                    # a service run's duration is its lifetime, not a unit
-                    # of work — it must not drag straggler medians around
-                    self._durations.setdefault(d.kind, []).append(task.duration_s)
+                # NB: the straggler duration history is _cond state — it is
+                # recorded in _on_worker_exit when this completion is
+                # finalized, not here under _result_lock
         except ServicePreempted as e:
             with self._result_lock:
                 if task.state == TaskState.DONE:
@@ -538,6 +541,11 @@ class RemoteAgent:
                     # first completion wins, even with a twin still running
                     task.finalized = True
                     to_finalize = True
+                    if not task.description.service:
+                        # a service run's duration is its lifetime, not a
+                        # unit of work — it must not drag straggler medians
+                        self._durations.setdefault(
+                            task.description.kind, []).append(task.duration_s)
                 elif task.state == TaskState.FAILED and not in_flight:
                     if (not self._closed
                             and task.attempts <= task.description.max_retries

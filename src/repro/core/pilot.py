@@ -46,11 +46,14 @@ class Pilot:
                  task_kinds: Tuple[str, ...] = ()):
         self.uid = uid
         self.task_kinds = tuple(task_kinds)
+        # _devices is append-never after construction; only the index sets
+        # below change, so they carry the lock discipline.
         self._devices = list(devices)
-        self._failed: set = set()
-        self._leased: dict = {}  # device index -> task uid
+        self._failed: set = set()  # guarded-by: _lock
+        self._leased: dict = {}  # guarded-by: _lock  (device index -> task uid)
         self._lock = threading.Lock()
-        self._listeners: list = []  # called (no args) when capacity frees/changes
+        # called (no args) when capacity frees/changes
+        self._listeners: list = []  # guarded-by: _lock
         self.created_at = time.time()
 
     # -- capacity-change notification ----------------------------------------
@@ -68,7 +71,9 @@ class Pilot:
                 self._listeners.remove(cb)
 
     def _notify(self) -> None:
-        for cb in list(self._listeners):
+        with self._lock:
+            listeners = list(self._listeners)
+        for cb in listeners:  # outside the lock: callbacks take their own locks
             cb()
 
     # -- capacity ------------------------------------------------------------
@@ -78,6 +83,10 @@ class Pilot:
         return len(self._devices)
 
     def alive_devices(self) -> List:
+        with self._lock:
+            return self._alive_devices_locked()
+
+    def _alive_devices_locked(self) -> List:
         return [d for i, d in enumerate(self._devices) if i not in self._failed]
 
     def alive_count(self) -> int:
@@ -156,10 +165,10 @@ class PilotManager:
 
     def __init__(self, devices: Optional[Sequence] = None,
                  pilot_factory=Pilot):
-        self.pilots: List[Pilot] = []
+        self.pilots: List[Pilot] = []  # guarded-by: _lock
         self._pilot_factory = pilot_factory
-        self._devices = list(devices) if devices is not None else None
-        self._free: Optional[List] = None  # resolved with _devices
+        self._devices = list(devices) if devices is not None else None  # guarded-by: _lock
+        self._free: Optional[List] = None  # guarded-by: _lock  (resolved with _devices)
         self._lock = threading.Lock()
 
     def _ensure_pool_locked(self) -> None:
@@ -237,8 +246,11 @@ class PilotManager:
         error or a reason to wait.
         """
         need = max(num_devices, 1)
+        if pilots is None:
+            with self._lock:
+                pilots = list(self.pilots)
         best, best_score = None, None
-        for p in (pilots if pilots is not None else self.pilots):
+        for p in pilots:
             if p in exclude or not p.admits(kinds):
                 continue
             if p.alive_count() < need:

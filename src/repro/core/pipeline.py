@@ -104,10 +104,10 @@ class Pipeline:
         self.name = name
         self.stages = list(stages)
         self.quota = quota
-        self.results: Dict[str, Any] = {}
-        self.tasks: Dict[str, Task] = {}
-        self.error: Optional[str] = None
-        self.failed_stage: Optional[str] = None
+        self.results: Dict[str, Any] = {}  # guarded-by: _lock
+        self.tasks: Dict[str, Task] = {}  # guarded-by: _lock
+        self.error: Optional[str] = None  # guarded-by: _lock
+        self.failed_stage: Optional[str] = None  # guarded-by: _lock
         self.started_at: Optional[float] = None
         self.finished_at: Optional[float] = None
         self.migrations: List[Dict[str, Any]] = []
@@ -118,18 +118,18 @@ class Pipeline:
         # stage unplaceable and fails the pipeline.  ``stage_agents``
         # records where each submitted stage actually ran.
         self.placement = placement
-        self.stage_agents: Dict[str, RemoteAgent] = {}
+        self.stage_agents: Dict[str, RemoteAgent] = {}  # guarded-by: _lock
         # one control handle per service stage, created eagerly so callers
         # can hold the handle before (and across) the stage's task attempts
         self.service_controls: Dict[str, ServiceControl] = {
             s.name: ServiceControl() for s in self.stages if s.service}
         self._lock = threading.Lock()
-        self._submitted: set = set()
-        self._quota_agents: set = set()  # agent ids already given our quota
-        self._agent: Optional[RemoteAgent] = None
-        self._on_finish: Optional[Callable[["Pipeline"], None]] = None
-        self._stage_observers: List[Callable[["Pipeline", Stage, Task], None]] = []
-        self._finishing = False  # test-and-set under _lock (see _finish)
+        self._submitted: set = set()  # guarded-by: _lock
+        self._quota_agents: set = set()  # guarded-by: _lock (agent ids already given our quota)
+        self._agent: Optional[RemoteAgent] = None  # guarded-by: _lock
+        self._on_finish: Optional[Callable[["Pipeline"], None]] = None  # guarded-by: _lock
+        self._stage_observers: List[Callable[["Pipeline", Stage, Task], None]] = []  # guarded-by: _lock
+        self._finishing = False  # guarded-by: _lock (test-and-set, see _finish)
         self._finished_evt = threading.Event()
 
     # -- public ----------------------------------------------------------------
@@ -219,7 +219,9 @@ class Pipeline:
     def abort(self, reason: str) -> None:
         """Mark the pipeline failed without running it (e.g. no pilot can
         satisfy its placement requirements)."""
-        self.error = reason
+        with self._lock:
+            if self.error is None:  # first error wins, like _stage_done
+                self.error = reason
         if self.started_at is None:
             self.started_at = time.time()
         self._finish()
@@ -241,7 +243,8 @@ class Pipeline:
             (ctl.drain if drain else ctl.stop)()
         deadline = None if timeout is None else time.time() + timeout
         for name in self.service_controls:
-            task = self.tasks.get(name)
+            with self._lock:
+                task = self.tasks.get(name)
             if task is None:
                 continue  # never submitted (deps unmet / pipeline aborted)
             remaining = (None if deadline is None
@@ -254,9 +257,12 @@ class Pipeline:
         """Blocking single-pipeline execution; raises on stage failure."""
         self.start(agent)
         self.wait()
-        if self.error is not None:
-            raise RuntimeError(f"pipeline {self.name} {self.error}")
-        return self.results
+        with self._lock:
+            error = self.error
+            results = self.results
+        if error is not None:
+            raise RuntimeError(f"pipeline {self.name} {error}")
+        return results
 
     # -- internals -------------------------------------------------------------
 
@@ -401,6 +407,7 @@ class Pipeline:
                 # back into error state
                 pass
             finished = self._is_finished_locked()
+            error = self.error
         for cb in observers:  # outside the lock: observers take their own
             try:              # locks (e.g. Session's placement accounting)
                 cb(self, stage, task)
@@ -408,7 +415,9 @@ class Pipeline:
                 pass           # the DAG driver
         if finished:
             self._finish()
-        elif self.error is None:
+        elif error is None:
+            # a stale None here is benign: _submit_ready rechecks under
+            # the lock before submitting anything
             self._submit_ready()
 
     def _barrier_stages(self) -> List[Stage]:
@@ -437,7 +446,9 @@ class Pipeline:
             if self._finishing:
                 return
             self._finishing = True
-        if self.error is not None:
+            error = self.error
+            on_finish = self._on_finish
+        if error is not None:
             # a failed pipeline must not leak its services: nobody is
             # coming back to drain them, and a running service pins its
             # device lease (cancel_pilot would refuse forever)
@@ -445,16 +456,17 @@ class Pipeline:
                 ctl.stop()
         self.finished_at = time.time()
         self._finished_evt.set()
-        if self._on_finish is not None:
-            self._on_finish(self)
+        if on_finish is not None:
+            on_finish(self)  # outside the lock: arbitrary user callback
 
     def result_dict(self) -> Dict[str, Any]:
         """Per-pipeline results; failures recorded, not raised (Table-4
         fault-isolation contract)."""
-        out = dict(self.results)
-        if self.error is not None:
-            out["_error"] = self.error
-            out["_failed_stage"] = self.failed_stage
+        with self._lock:
+            out = dict(self.results)
+            if self.error is not None:
+                out["_error"] = self.error
+                out["_failed_stage"] = self.failed_stage
         return out
 
 

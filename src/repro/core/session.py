@@ -415,13 +415,16 @@ class Session:
         self._max_workers = max_workers_per_pilot
         self._transport = transport
         self._lock = threading.Lock()
-        self._pilots: List[Pilot] = []
-        self._owned_pilots: List[Pilot] = []
-        self._agents: Dict[str, RemoteAgent] = {}  # pilot uid -> agent
-        self._assigned: Dict[str, int] = {}  # promised-not-yet-leased devices
-        self._stage_pilot: Dict[Tuple[str, str], str] = {}
-        self._pipelines: List[Pipeline] = []
-        self._closed = False
+        self._pilots: List[Pilot] = []  # guarded-by: _lock
+        self._owned_pilots: List[Pilot] = []  # guarded-by: _lock
+        self._agents: Dict[str, RemoteAgent] = {}  # guarded-by: _lock  (pilot uid -> agent)
+        # promised-not-yet-leased devices
+        self._assigned: Dict[str, int] = {}  # guarded-by: _lock
+        self._stage_pilot: Dict[Tuple[str, str], str] = {}  # guarded-by: _lock
+        self._pipelines: List[Pipeline] = []  # guarded-by: _lock
+        self._closed = False  # guarded-by: _lock
+        # appended only by the single thread that wins the _closed
+        # test-and-set in close(), so it needs no lock of its own
         self.close_errors: List[str] = []
 
     # -- lifecycle -----------------------------------------------------------

@@ -56,11 +56,11 @@ class ServiceControl:
 
     def __init__(self):
         self._cond = threading.Condition()
-        self._inbox: Deque[Any] = collections.deque()
-        self._stop = False
-        self._drain = False
-        self._preempt = False
-        self.accepted = 0
+        self._inbox: Deque[Any] = collections.deque()  # guarded-by: _cond
+        self._stop = False  # guarded-by: _cond
+        self._drain = False  # guarded-by: _cond
+        self._preempt = False  # guarded-by: _cond
+        self.accepted = 0  # guarded-by: _cond
 
     # -- submitting side -----------------------------------------------------
 
@@ -203,7 +203,7 @@ class Task:
     finalized: bool = dataclasses.field(default=False, repr=False, compare=False)
     _finished: threading.Event = dataclasses.field(
         default_factory=threading.Event, repr=False, compare=False)
-    _callbacks: List[Callable[["Task"], None]] = dataclasses.field(
+    _callbacks: List[Callable[["Task"], None]] = dataclasses.field(  # guarded-by: _cb_lock
         default_factory=list, repr=False, compare=False)
     _cb_lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False)

@@ -19,7 +19,8 @@ from repro.kernels import rmsnorm as _rms
 def _on_tpu() -> bool:
     try:
         return jax.devices()[0].platform == "tpu"
-    except Exception:  # pragma: no cover
+    except (RuntimeError, IndexError):  # pragma: no cover - backend probe:
+        # RuntimeError = no backend initialised, IndexError = zero devices
         return False
 
 

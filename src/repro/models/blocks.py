@@ -107,8 +107,10 @@ def _check_prefill_base(raw_len) -> None:
             "prefill (S>1) requires a scalar cache length; per-slot "
             "lengths only apply to single-token decode")
     try:
-        concrete = int(raw_len)
-    except Exception as e:  # traced / data-dependent value
+        concrete = int(raw_len)  # jit-ok: deliberate trace-time probe
+    except (TypeError, jax.errors.ConcretizationTypeError) as e:
+        # traced / data-dependent value: int() on a tracer raises
+        # ConcretizationTypeError (a TypeError subclass)
         raise NotImplementedError(
             "prefill (S>1) needs a statically-zero cache length (pass a "
             "plain int 0): attention runs over the fresh K/V only, so "

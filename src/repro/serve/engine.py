@@ -239,14 +239,19 @@ class ServeEngine:
 
         self._pack = jax.jit(_pack, donate_argnums=(0,))
 
+        # _lock guards the state shared with submitter/monitor threads
+        # (queue, stats, retrace tracking).  The slot/page fields below
+        # (cache, lengths, slots, free_pages, slot_pages, block_table, ...)
+        # are owned by the engine thread that calls step(); checkpoint()/
+        # restore()/_release_state() snapshot them under _lock.
         self._lock = threading.Lock()
-        self.queue: Deque[Request] = collections.deque()
+        self.queue: Deque[Request] = collections.deque()  # guarded-by: _lock
         self.cache = None
         self.lengths = np.zeros(max_slots, np.int32)
         self.last_tok = np.zeros(max_slots, np.int32)
         self.slots: List[Optional[Request]] = [None] * max_slots
-        self._stats: Dict[str, int] = collections.defaultdict(int)
-        self._seen_shapes: Dict[str, set] = collections.defaultdict(set)
+        self._stats: Dict[str, int] = collections.defaultdict(int)  # guarded-by: _lock
+        self._seen_shapes: Dict[str, set] = collections.defaultdict(set)  # guarded-by: _lock
         self._init_state()
         self._page_bytes = 0
         self._cache_bytes = _tree_bytes(self.cache)
@@ -355,19 +360,26 @@ class ServeEngine:
             return bool(self.queue) or any(r is not None for r in self.slots)
 
     def occupancy(self) -> int:
-        return sum(r is not None for r in self.slots)
+        with self._lock:  # cross-thread monitoring read
+            return sum(r is not None for r in self.slots)
 
     def pages_in_use(self) -> int:
-        return self.num_pages - len(self.free_pages) if self.paged else 0
+        with self._lock:  # cross-thread monitoring read
+            return self.num_pages - len(self.free_pages) if self.paged else 0
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        with self._lock:
+            self._stats[key] += n
 
     # -- page bookkeeping ----------------------------------------------------
 
     def _count_retrace(self, kind: str, key) -> None:
-        seen = self._seen_shapes[kind]
-        if key not in seen:
-            seen.add(key)
-            self._stats["retraces"] += 1
-            self._stats[f"retraces_{kind}"] += 1
+        with self._lock:
+            seen = self._seen_shapes[kind]
+            if key not in seen:
+                seen.add(key)
+                self._stats["retraces"] += 1
+                self._stats[f"retraces_{kind}"] += 1
 
     def _alloc_pages(self, slot: int, n: int) -> bool:
         """Append ``n`` fresh pages to a slot's block table (False if the
@@ -382,8 +394,9 @@ class ServeEngine:
             self.slot_pages[slot].append(pid)
             self.block_table[slot, base + j] = pid
         used = self.pages_in_use()
-        if used > self._stats.get("peak_pages", 0):
-            self._stats["peak_pages"] = used
+        with self._lock:
+            if used > self._stats.get("peak_pages", 0):
+                self._stats["peak_pages"] = used
         return True
 
     def _free_slot_pages(self, slot: int) -> None:
@@ -422,7 +435,7 @@ class ServeEngine:
         if self.paged:
             self._free_slot_pages(i)
         req._finish(state, error)
-        self._stats["completed" if state is RequestState.DONE else "failed"] += 1
+        self._bump("completed" if state is RequestState.DONE else "failed")
 
     def _fail_outstanding(self, error: str) -> None:
         """Terminate every accepted-but-unfinished request (hard stop):
@@ -434,8 +447,10 @@ class ServeEngine:
         with self._lock:
             queued, self.queue = list(self.queue), collections.deque()
         for req in queued:
+            # _finish runs callbacks — keep it outside the lock
             req._finish(RequestState.FAILED, error)
-            self._stats["failed"] += 1
+        if queued:
+            self._bump("failed", len(queued))
 
     def _should_stop(self, req: Request, tok: int, length: int) -> bool:
         return (len(req.tokens) >= req.max_new_tokens
@@ -573,9 +588,10 @@ class ServeEngine:
             self.last_tok[i] = tok
             if self._should_stop(req, tok, int(self.lengths[i])):
                 self._finish_slot(i, RequestState.DONE)
-        self._stats["admitted"] += nb
-        self._stats["prefill_batches"] += 1
-        self._stats["prefill_tokens"] += int(lens.sum())
+        with self._lock:
+            self._stats["admitted"] += nb
+            self._stats["prefill_batches"] += 1
+            self._stats["prefill_tokens"] += int(lens.sum())
         return nb
 
     def step(self) -> bool:
@@ -606,25 +622,29 @@ class ServeEngine:
         toks = np.asarray(next_tok)
         self.slot_keys = np.array(new_keys)  # writable copy
         self.lengths = self.lengths + active.astype(np.int32)
-        self._stats["decode_steps"] += 1
-        self._stats["decode_slot_steps"] += int(active.sum())
         # memory-per-token accounting (what the serving benchmark reports):
         # paged holds only its allocated pages, contiguous always holds the
         # full [max_slots, max_len] rows
         bytes_now = (self.pages_in_use() * self._page_bytes if self.paged
                      else self._cache_bytes)
-        self._stats["kv_bytes_step_sum"] += bytes_now
-        self._stats["kv_tokens_step_sum"] += int(
-            self.lengths[active].sum())
+        with self._lock:
+            self._stats["decode_steps"] += 1
+            self._stats["decode_slot_steps"] += int(active.sum())
+            self._stats["kv_bytes_step_sum"] += bytes_now
+            self._stats["kv_tokens_step_sum"] += int(
+                self.lengths[active].sum())
+        generated = 0
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
             tok = int(toks[i])
             req.tokens.append(tok)
             self.last_tok[i] = tok
-            self._stats["tokens_generated"] += 1
+            generated += 1
             if self._should_stop(req, tok, int(self.lengths[i])):
                 self._finish_slot(i, RequestState.DONE)
+        if generated:
+            self._bump("tokens_generated", generated)
         return True
 
     def run_until_drained(self, max_steps: int = 100_000) -> None:
@@ -649,7 +669,7 @@ class ServeEngine:
         """
         if resume_state is not None:
             self.restore(resume_state)
-            self._stats["resumes"] += 1
+            self._bump("resumes")
         if self.cache is None:
             self._init_state()
         while True:
@@ -665,7 +685,7 @@ class ServeEngine:
                     self._fail_outstanding("service stopped before completion")
                     break
                 if control.preempt_requested():
-                    self._stats["preemptions"] += 1  # before the snapshot
+                    self._bump("preemptions")  # before the snapshot
                     # so the count survives restore()
                     state = self.checkpoint()
                     self._release_state()
@@ -682,13 +702,15 @@ class ServeEngine:
     # -- reporting -----------------------------------------------------------
 
     def stats(self) -> Dict[str, Any]:
-        out = dict(self._stats)
+        with self._lock:
+            out = dict(self._stats)
+            queued = len(self.queue)
         out.update({
             "max_slots": self.max_slots,
             "max_len": self.max_len,
             "continuous": self.continuous,
             "kv_layout": "paged" if self.paged else "contiguous",
-            "queued": len(self.queue),
+            "queued": queued,
             "occupied": self.occupancy(),
             "kv_cache_bytes": (self.pages_in_use() * self._page_bytes
                                if self.paged else self._cache_bytes),
@@ -717,4 +739,5 @@ class ServeEngine:
         return out
 
     def reset_stats(self) -> None:
-        self._stats = collections.defaultdict(int)
+        with self._lock:
+            self._stats = collections.defaultdict(int)

@@ -1,0 +1,9 @@
+"""Fixture modules with deliberately seeded violations.
+
+These files are inputs for the analyzer tests in
+``tests/test_analysis_passes.py`` — they are parsed (never executed) by
+the static passes, and each one carries exactly the violations its test
+asserts on.  They are NOT scanned by ``python -m repro.analysis`` (which
+only walks ``src/repro``), so the seeded findings never dirty the repo
+baseline.
+"""

@@ -1,0 +1,19 @@
+"""Seeded broad-except violation.
+
+``risky`` must be flagged; ``isolated`` carries the ``noqa: BLE001``
+boundary marker and must not be.
+"""
+
+
+def risky():
+    try:
+        return 1 // 0
+    except Exception:  # SEEDED VIOLATION: broad handler, no boundary marker
+        return None
+
+
+def isolated():
+    try:
+        return 1 // 0
+    except Exception:  # noqa: BLE001 - fixture isolation boundary
+        return None

@@ -1,0 +1,41 @@
+"""Seeded lock-discipline violations (guarded-attr escapes).
+
+Expected findings (asserted exactly in test_analysis_passes.py):
+
+* ``Counter.value`` read in ``peek`` without the lock;
+* ``Counter.history`` captured by a closure that outlives the ``with``
+  block in ``escape``.
+
+Everything else is a clean pattern the pass must NOT flag: locked
+access, ``*_locked`` helpers, ``# caller-locked`` methods, ``__init__``.
+"""
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.value = 0  # guarded-by: _lock
+        self.history = []  # guarded-by: _lock
+
+    def bump(self):
+        with self._lock:
+            self.value += 1
+            self.history.append(self.value)
+
+    def peek(self):
+        return self.value  # SEEDED VIOLATION: unlocked read
+
+    def escape(self):
+        with self._lock:
+            def snapshot():
+                # SEEDED VIOLATION: the closure runs after the with block
+                # exits, so the lock is no longer held
+                return list(self.history)
+            return snapshot
+
+    def _total_locked(self):
+        return sum(self.history)
+
+    def audited(self):  # caller-locked
+        return len(self.history)
