@@ -1,7 +1,8 @@
 """Kernel contract pass — device-free shape/dtype verification.
 
 ``jax.eval_shape`` abstractly evaluates the serving steps that feed every
-``kernels/ops.py`` dispatch (prefill -> flash_attention, decode ->
+``kernels/ops.py`` dispatch (prefill -> flash_attention, chunked prefill
+-> prefill_attention / prefill_attention_paged, decode ->
 decode_attention / decode_attention_paged, rmsnorm throughout) across
 
 - the full config matrix: all 11 ``configs/*`` modules (10 registered
@@ -31,11 +32,10 @@ from typing import Any, Dict, List, Tuple
 from repro.analysis.findings import Finding
 
 _PREFILL_BUCKETS = (8, 16)        # powers of two, like ServeEngine buckets
+_CHUNK_BUCKETS = (4, 8)           # chunked-prefill token buckets
 _B = 2
 _MAX_LEN = 32
 _PAGE_SIZE = 8
-_FLASH_BLOCK = 128                # flash_attention block_q/block_k default
-_TRAIN_SEQ_LENS = (4096,)         # train_4k shape
 
 
 def _finding(rule: str, symbol: str, message: str) -> Finding:
@@ -94,7 +94,8 @@ def _check_supported(arch: str, cfg, findings: List[Finding]) -> None:
 
     from repro.common.params import abstract_params
     from repro.models.lm import lm_cache_specs, lm_paged_cache_specs, lm_specs
-    from repro.train.step import make_decode_step, make_prefill_step
+    from repro.train.step import (make_decode_step, make_prefill_chunk_step,
+                                  make_prefill_step)
 
     sds = jax.ShapeDtypeStruct
     params = abstract_params(lm_specs(cfg))
@@ -162,25 +163,63 @@ def _check_supported(arch: str, cfg, findings: List[Finding]) -> None:
                 "kernel-contract", label,
                 f"decode must preserve the cache layout ({bad})"))
 
+    # chunked prefill (ragged cache-writing append -> ops.prefill_attention
+    # / prefill_attention_paged) across chunk buckets x both layouts
+    chunk_step = make_prefill_chunk_step(cfg)
+    for T in _CHUNK_BUCKETS:
+        for layout, cache_in, bt in layouts:
+            label = f"{arch}/{layout}/prefill_chunk@T{T}"
+            in_sig = _tree_sig(cache_in)
+            try:
+                nt, lg, nc = jax.eval_shape(
+                    chunk_step, params, sds((_B, T), jnp.int32),
+                    sds((_B,), jnp.int32), sds((_B,), jnp.int32),
+                    cache_in, bt)
+            except Exception as e:  # noqa: BLE001 - checker isolation boundary
+                findings.append(_finding(
+                    "kernel-contract", label,
+                    f"abstract eval failed: {e!r}"))
+                continue
+            if tuple(nt.shape) != (_B,) or nt.dtype != jnp.int32:
+                findings.append(_finding(
+                    "kernel-contract", label,
+                    f"next_token: expected [{_B}] int32, got "
+                    f"{tuple(nt.shape)} {nt.dtype}"))
+            if tuple(lg.shape) != (_B, V):
+                findings.append(_finding(
+                    "kernel-contract", label,
+                    f"last_logits: expected [{_B}, {V}], got "
+                    f"{tuple(lg.shape)}"))
+            bad = _sig_mismatch(in_sig, _tree_sig(nc))
+            if bad:
+                findings.append(_finding(
+                    "kernel-contract", label,
+                    f"chunked prefill must append in place, preserving "
+                    f"the cache layout ({bad})"))
+
 
 def _check_unsupported(arch: str, cfg, findings: List[Finding]) -> None:
     """Out-of-envelope archs must refuse cleanly, not mis-trace."""
     from repro.models.lm import lm_paged_cache_specs
-    from repro.train.step import make_prefill_step
+    from repro.train.step import make_prefill_chunk_step, make_prefill_step
 
-    try:
-        make_prefill_step(cfg, with_cache=True, max_len=_MAX_LEN)
-    except NotImplementedError:
-        pass
-    except Exception as e:  # noqa: BLE001 - checker isolation boundary
-        findings.append(_finding(
-            "kernel-contract", f"{arch}/contiguous/prefill",
-            f"expected clean NotImplementedError refusal, got {e!r}"))
-    else:
-        findings.append(_finding(
-            "kernel-contract", f"{arch}/contiguous/prefill",
-            "cache-writing prefill must refuse non-token-LM / "
-            "non-attention archs with NotImplementedError"))
+    for name, build in (
+            ("prefill", lambda: make_prefill_step(
+                cfg, with_cache=True, max_len=_MAX_LEN)),
+            ("prefill_chunk", lambda: make_prefill_chunk_step(cfg))):
+        try:
+            build()
+        except NotImplementedError:
+            continue
+        except Exception as e:  # noqa: BLE001 - checker isolation boundary
+            findings.append(_finding(
+                "kernel-contract", f"{arch}/contiguous/{name}",
+                f"expected clean NotImplementedError refusal, got {e!r}"))
+        else:
+            findings.append(_finding(
+                "kernel-contract", f"{arch}/contiguous/{name}",
+                "cache-writing prefill must refuse non-token-LM / "
+                "non-attention archs with NotImplementedError"))
     try:
         lm_paged_cache_specs(cfg, _B * (_MAX_LEN // _PAGE_SIZE), _PAGE_SIZE)
     except NotImplementedError:
@@ -200,13 +239,9 @@ def blockspec_findings(arch: str, cfg) -> List[Finding]:
             "blockspec", f"{arch}/gqa",
             f"padded head grid H={H}, KV={KV}: kernel index maps need "
             f"H %% KV == 0 (uniform GQA groups)"))
-    for S in _TRAIN_SEQ_LENS:
-        if S >= _FLASH_BLOCK and S % _FLASH_BLOCK != 0:
-            out.append(_finding(
-                "blockspec", f"{arch}/flash@S{S}",
-                f"flash_attention tiles S={S} with block "
-                f"{_FLASH_BLOCK}: S %% block != 0 leaves a ragged "
-                f"q/k tile the grid cannot cover"))
+    # flash_attention S % block raggedness is no longer a finding: the
+    # wrapper pads S to an lcm(block_q, block_k) multiple and masks the
+    # tail keys inside the kernel (kv_len), so any S lowers correctly
     num_pages, page_size = _B * (_MAX_LEN // _PAGE_SIZE), _PAGE_SIZE
     if num_pages * page_size < _MAX_LEN:
         out.append(_finding(

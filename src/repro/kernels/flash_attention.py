@@ -26,7 +26,8 @@ NEG_INF = -1e30
 
 
 def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-               scale: float, block_q: int, block_k: int, causal: bool):
+               scale: float, block_q: int, block_k: int, causal: bool,
+               kv_len: int):
     qi = pl.program_id(1)
     kj = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -37,9 +38,12 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    run = (qi * block_q + block_q - 1 >= kj * block_k) if causal else True
+    # ragged tail: skip KV blocks wholly past the true sequence length
+    run = kj * block_k < kv_len
+    if causal:
+        run = jnp.logical_and(run, qi * block_q + block_q - 1 >= kj * block_k)
 
-    @pl.when(run if causal else (kj >= 0))
+    @pl.when(run)
     def _compute():
         q = q_ref[0, ...].astype(jnp.float32)  # [bq, D]
         k = k_ref[0, ...].astype(jnp.float32)  # [bk, D]
@@ -48,14 +52,18 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
         ) * scale  # [bq, bk]
+        kpos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < kv_len
         if causal:
             qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-            kpos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-            s = jnp.where(qpos >= kpos, s, NEG_INF)
+            mask = jnp.logical_and(mask, qpos >= kpos)
+        s = jnp.where(mask, s, NEG_INF)
         m_prev = m_scr[...]
         l_prev = l_scr[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
         p = jnp.exp(s - m_new)
+        # a fully-masked row must contribute zero to the denominator
+        p = jnp.where(mask, p, 0.0)
         alpha = jnp.exp(m_prev - m_new)
         l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
         acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
@@ -90,8 +98,12 @@ def flash_attention(
     scale = 1.0 / math.sqrt(D)
     block_q = min(block_q, S)
     block_k = min(block_k, S)
-    nq = S // block_q
-    nk = S // block_k
+    # pad the ragged tail up to a whole block (masked inside the kernel)
+    # rather than silently truncating S % block trailing tokens
+    step = math.lcm(block_q, block_k)
+    Sp = pl.cdiv(S, step) * step
+    nq = Sp // block_q
+    nk = Sp // block_k
     grid = (B * H, nq, nk)
 
     def q_map(bh, qi, kj):
@@ -104,11 +116,14 @@ def flash_attention(
     q_r = q.reshape(B * H, S, D)
     k_r = k.reshape(B * KV, S, D)
     v_r = v.reshape(B * KV, S, D)
+    if Sp != S:
+        pad = ((0, 0), (0, Sp - S), (0, 0))
+        q_r, k_r, v_r = (jnp.pad(x, pad) for x in (q_r, k_r, v_r))
 
     out = pl.pallas_call(
         functools.partial(
             _fa_kernel, scale=scale, block_q=block_q, block_k=block_k,
-            causal=causal,
+            causal=causal, kv_len=S,
         ),
         grid=grid,
         in_specs=[
@@ -117,7 +132,7 @@ def flash_attention(
             pl.BlockSpec((1, block_k, D), kv_map),
         ],
         out_specs=pl.BlockSpec((1, block_q, D), q_map),
-        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp, D), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((block_q, 1), jnp.float32),   # running max
             pltpu.VMEM((block_q, 1), jnp.float32),   # running denom
@@ -125,4 +140,4 @@ def flash_attention(
         ],
         interpret=interpret,
     )(q_r, k_r, v_r)
-    return out.reshape(B, H, S, D)
+    return out[:, :S].reshape(B, H, S, D)

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
 from repro.kernels import hash_partition as _hp
+from repro.kernels import prefill_attention as _pf
 from repro.kernels import ref as _ref
 from repro.kernels import rmsnorm as _rms
 
@@ -82,6 +83,42 @@ def decode_attention_paged(q, k_pages, v_pages, block_table, cache_len, *,
             interpret=True, **kw)
     return _ref.decode_attention_paged_ref(
         q, k_pages, v_pages, block_table, cache_len, window=window)
+
+
+def prefill_attention(q, k_new, v_new, k_cache, v_cache, base, chunk_lens,
+                      *, impl: str = "auto", **kw):
+    """Ragged cache-writing prefill, contiguous layout.  q [B,T,H,D];
+    k_new, v_new [B,T,KV,D]; caches [B,S,KV,D]; base, chunk_lens [] or
+    [B] int32 -> (out [B,T,H,D], k_cache', v_cache')."""
+    mode = _resolve_decode(impl)
+    if mode == "pallas":
+        return _pf.prefill_attention(
+            q, k_new, v_new, k_cache, v_cache, base, chunk_lens, **kw)
+    if mode == "interpret":
+        return _pf.prefill_attention(
+            q, k_new, v_new, k_cache, v_cache, base, chunk_lens,
+            interpret=True, **kw)
+    return _ref.prefill_attention_ref(
+        q, k_new, v_new, k_cache, v_cache, base, chunk_lens)
+
+
+def prefill_attention_paged(q, k_new, v_new, k_pages, v_pages, block_table,
+                            base, chunk_lens, *, impl: str = "auto", **kw):
+    """Ragged cache-writing prefill through per-row block tables.
+    q [B,T,H,D]; pools [num_pages,page_size,KV,D]; block_table
+    [B,max_pages] int32 (sentinel >= num_pages = unallocated);
+    base, chunk_lens [] or [B] int32 -> (out, k_pages', v_pages')."""
+    mode = _resolve_decode(impl)
+    if mode == "pallas":
+        return _pf.prefill_attention_paged(
+            q, k_new, v_new, k_pages, v_pages, block_table, base,
+            chunk_lens, **kw)
+    if mode == "interpret":
+        return _pf.prefill_attention_paged(
+            q, k_new, v_new, k_pages, v_pages, block_table, base,
+            chunk_lens, interpret=True, **kw)
+    return _ref.prefill_attention_paged_ref(
+        q, k_new, v_new, k_pages, v_pages, block_table, base, chunk_lens)
 
 
 def rmsnorm(x, w, *, eps: float = 1e-5, impl: str = "auto", **kw):

@@ -73,6 +73,68 @@ def decode_attention_paged_ref(q, k_pages, v_pages, block_table, cache_len,
     return decode_attention_ref(q, k, v, cache_len, window=window)
 
 
+def prefill_attention_ref(q, k_new, v_new, k_cache, v_cache, base,
+                          chunk_lens):
+    """Ragged cache-writing prefill oracle, contiguous layout.
+
+    q [B,T,H,D]; k_new, v_new [B,T,KV,D]; k_cache, v_cache [B,S,KV,D];
+    base, chunk_lens [] or [B] int32.  Row ``b``'s first ``chunk_lens[b]``
+    chunk tokens are appended at offset ``base[b]`` and each valid query
+    ``i`` attends causally over ``[0, base[b] + i]``; padding query rows
+    produce exact zeros.  Returns ``(out [B,T,H,D], k_cache', v_cache')``.
+    """
+    from repro.kernels.prefill_attention import write_chunk
+
+    B = q.shape[0]
+    base = jnp.broadcast_to(jnp.asarray(base, jnp.int32).reshape(-1), (B,))
+    clens = jnp.broadcast_to(
+        jnp.asarray(chunk_lens, jnp.int32).reshape(-1), (B,))
+    kc = write_chunk(k_cache, k_new, base, clens)
+    vc = write_chunk(v_cache, v_new, base, clens)
+    return prefill_attend_ref(q, kc, vc, base, clens), kc, vc
+
+
+def prefill_attend_ref(q, kc, vc, base, clens):
+    """Masked causal attention of a [B,T] chunk over a contiguous
+    [B,S,KV,D] cache at per-row offsets; padding rows exact zero."""
+    T, H, D = q.shape[1], q.shape[2], q.shape[3]
+    S, KV = kc.shape[1], kc.shape[2]
+    G = H // KV
+    kf = jnp.repeat(kc, G, axis=2).astype(jnp.float32)  # [B,S,H,D]
+    vf = jnp.repeat(vc, G, axis=2).astype(jnp.float32)
+    s = jnp.einsum(
+        "bthd,bshd->bhts", q.astype(jnp.float32), kf) / math.sqrt(D)
+    qpos = base[:, None] + jnp.arange(T)[None, :]          # [B,T]
+    mask = jnp.arange(S)[None, None, :] <= qpos[:, :, None]  # [B,T,S]
+    s = jnp.where(mask[:, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", p, vf)
+    valid = jnp.arange(T)[None, :] < clens[:, None]        # [B,T]
+    out = jnp.where(valid[:, :, None, None], out, 0.0)
+    return out.astype(q.dtype)
+
+
+def prefill_attention_paged_ref(q, k_new, v_new, k_pages, v_pages,
+                                block_table, base, chunk_lens):
+    """Paged prefill oracle: write the chunk through the block tables,
+    gather each row's pages into a contiguous view, and reuse the
+    contiguous oracle's attention (discarding its cache outputs).
+    Returns ``(out [B,T,H,D], k_pages', v_pages')``."""
+    from repro.kernels.prefill_attention import write_chunk_paged
+
+    num_pages, page_size, KV, D = k_pages.shape
+    B, max_pages = block_table.shape
+    base = jnp.broadcast_to(jnp.asarray(base, jnp.int32).reshape(-1), (B,))
+    clens = jnp.broadcast_to(
+        jnp.asarray(chunk_lens, jnp.int32).reshape(-1), (B,))
+    kp = write_chunk_paged(k_pages, block_table, k_new, base, clens)
+    vp = write_chunk_paged(v_pages, block_table, v_new, base, clens)
+    bt = jnp.clip(block_table.astype(jnp.int32), 0, num_pages - 1)
+    k = kp[bt].reshape(B, max_pages * page_size, KV, D)
+    v = vp[bt].reshape(B, max_pages * page_size, KV, D)
+    return prefill_attend_ref(q, k, v, base, clens), kp, vp
+
+
 def rmsnorm_ref(x, w, *, eps: float = 1e-5) -> jnp.ndarray:
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)

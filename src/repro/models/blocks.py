@@ -316,9 +316,17 @@ def attn_apply(
     causal: bool = True,
     window: int = 0,
     kv_source: Optional[jnp.ndarray] = None,
+    chunk_lens: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     """GQA attention. ``cache`` (decode): {"k","v","len"}. ``kv_source``
-    (cross-attention): encoder states."""
+    (cross-attention): encoder states.
+
+    ``chunk_lens`` ([B] int32, S>1 + cache only) selects the ragged
+    cache-writing prefill: row ``b``'s first ``chunk_lens[b]`` tokens of
+    the [B, S] slab append into its cache at offset ``cache["len"][b]``
+    and attend the full cached prefix — chunked / multi-turn prefill over
+    a warm cache, on both KV layouts.  Without it, S>1 prefill keeps the
+    legacy empty-cache fast path."""
     from repro.distributed.sharding import constrain
 
     cdt = cfg.compute_dtype
@@ -340,27 +348,58 @@ def attn_apply(
         # paged decode (continuous batching): each row appends into its
         # block-table page at its own length, attention gathers K/V
         # through the table — no contiguous per-slot rows exist
-        if k.shape[1] > 1:
-            raise NotImplementedError(
-                "paged prefill is not supported: prefill writes a "
-                "contiguous scratch cache which the engine packs into "
-                "pages (page-aligned chunks)")
         if window:
             raise NotImplementedError(
                 "windowed attention over a paged cache needs ring-aware "
                 "page recycling; the engine restricts paged serving to "
                 "full-attention blocks")
-        idx = jnp.asarray(cache["len"])
-        bt = cache["block_table"]
-        k_pages = _paged_append(cache["k_pages"], bt, idx, k[:, 0])
-        v_pages = _paged_append(cache["v_pages"], bt, idx, v[:, 0])
-        new_cache = {"k_pages": k_pages, "v_pages": v_pages,
-                     "block_table": bt, "len": idx + 1}
-        o = _paged_decode_attn(cfg, q, k_pages, v_pages, bt, idx + 1)
+        if k.shape[1] > 1:
+            if chunk_lens is None:
+                raise NotImplementedError(
+                    "paged prefill without chunk_lens is not supported: "
+                    "pass per-row chunk_lens to run the ragged "
+                    "cache-writing prefill through the block tables")
+            from repro.kernels import ops
+
+            base = jnp.broadcast_to(
+                jnp.asarray(cache["len"], jnp.int32).reshape(-1),
+                (k.shape[0],))
+            bt = cache["block_table"]
+            o, k_pages, v_pages = ops.prefill_attention_paged(
+                q, k, v, cache["k_pages"], cache["v_pages"], bt, base,
+                chunk_lens, impl=cfg.decode_impl)
+            new_cache = {"k_pages": k_pages, "v_pages": v_pages,
+                         "block_table": bt, "len": base + chunk_lens}
+        else:
+            idx = jnp.asarray(cache["len"])
+            bt = cache["block_table"]
+            k_pages = _paged_append(cache["k_pages"], bt, idx, k[:, 0])
+            v_pages = _paged_append(cache["v_pages"], bt, idx, v[:, 0])
+            new_cache = {"k_pages": k_pages, "v_pages": v_pages,
+                         "block_table": bt, "len": idx + 1}
+            o = _paged_decode_attn(cfg, q, k_pages, v_pages, bt, idx + 1)
     elif cache is not None and is_self:
         S = k.shape[1]
         slots_n = cache["k"].shape[1]
-        if S > 1:
+        if S > 1 and chunk_lens is not None:
+            # ragged cache-writing prefill: append the chunk at each
+            # row's own base offset and attend the full cached prefix
+            # (kernels/prefill_attention.py via the ops dispatch)
+            if window:
+                raise NotImplementedError(
+                    "windowed attention does not support chunked prefill "
+                    "over a warm cache (ring writes need the full prompt)")
+            from repro.kernels import ops
+
+            base = jnp.broadcast_to(
+                jnp.asarray(cache["len"], jnp.int32).reshape(-1),
+                (k.shape[0],))
+            o, k_cache, v_cache = ops.prefill_attention(
+                q, k, v, cache["k"], cache["v"], base, chunk_lens,
+                impl=cfg.decode_impl)
+            new_cache = {"k": k_cache, "v": v_cache,
+                         "len": base + chunk_lens}
+        elif S > 1:
             # batched prefill: write the whole prompt's K/V into the cache
             # in one shot and run the causal flash pass over the fresh
             # K/V (exact because the cache is statically empty — enforced
@@ -457,6 +496,8 @@ def mla_apply(
     x: jnp.ndarray,
     positions: jnp.ndarray,
     cache: Optional[Dict] = None,
+    *,
+    chunk_lens: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     cdt = cfg.compute_dtype
     B, S, _ = x.shape
@@ -479,7 +520,41 @@ def mla_apply(
     k_pe = apply_rope(k_pe[:, :, None, :], positions if positions.ndim == 2 else positions[..., 0], cfg.rope_theta)  # [B,S,1,rd]
 
     new_cache = None
-    if cache is not None and S > 1:
+    if cache is not None and S > 1 and chunk_lens is not None:
+        # ragged chunked prefill: append the latent chunk at each row's
+        # own base offset (both layouts), then attend the full cached
+        # latents with per-row causal masking — the latent-cache
+        # counterpart of the GQA prefill kernel (latents are rank-sized,
+        # so the masked dense expansion stays cheap)
+        from repro.kernels.prefill_attention import (write_chunk,
+                                                     write_chunk_paged)
+
+        base = jnp.broadcast_to(
+            jnp.asarray(cache["len"], jnp.int32).reshape(-1), (B,))
+        if "ckv_pages" in cache:
+            bt = cache["block_table"]
+            ckv_pages = write_chunk_paged(
+                cache["ckv_pages"], bt, c_kv, base, chunk_lens)
+            kpe_pages = write_chunk_paged(
+                cache["kpe_pages"], bt, k_pe[:, :, 0, :], base, chunk_lens)
+            new_cache = {"ckv_pages": ckv_pages, "kpe_pages": kpe_pages,
+                         "block_table": bt, "len": base + chunk_lens}
+            num_pages, page = ckv_pages.shape[0], ckv_pages.shape[1]
+            btc = jnp.clip(bt, 0, num_pages - 1)
+            mp = bt.shape[1]
+            ckv_c = ckv_pages[btc].reshape(B, mp * page,
+                                           ckv_pages.shape[-1])
+            kpe_c = kpe_pages[btc].reshape(B, mp * page,
+                                           kpe_pages.shape[-1])
+        else:
+            ckv_c = write_chunk(cache["c_kv"], c_kv, base, chunk_lens)
+            kpe_c = write_chunk(cache["k_pe"], k_pe[:, :, 0, :], base,
+                                chunk_lens)
+            new_cache = {"c_kv": ckv_c, "k_pe": kpe_c,
+                         "len": base + chunk_lens}
+        o = _mla_ragged_prefill_attn(cfg, params, q_nope, q_pe, ckv_c,
+                                     kpe_c, base, chunk_lens, cdt)
+    elif cache is not None and S > 1:
         # batched prefill: write the latent K/V for the whole prompt, then
         # run the full-attention pass over the fresh latents (exact
         # because the cache is statically empty — enforced BEFORE any
@@ -532,6 +607,32 @@ def mla_apply(
     y = jnp.einsum("bshk,hkd->bsd", o.astype(cdt), params["wo"].astype(cdt))
     y = _checkpoint_name(y, "block_out")
     return x + y.astype(x.dtype), new_cache
+
+
+def _mla_ragged_prefill_attn(cfg, params, q_nope, q_pe, ckv_c, kpe_c,
+                             base, clens, cdt):
+    """Ragged MLA prefill attention: expand the full cached latents to
+    per-head K/V and attend the [B,T] query chunk with per-row offsets
+    (padding query rows exact zero) — the masked oracle shared with the
+    GQA prefill kernels."""
+    from repro.kernels.ref import prefill_attend_ref
+
+    B, Sc = ckv_c.shape[0], ckv_c.shape[1]
+    H = q_nope.shape[2]
+    nd, rd, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv_c.astype(cdt),
+                        params["wk_b"].astype(cdt))
+    v_full = jnp.einsum("bsr,rhk->bshk", ckv_c.astype(cdt),
+                        params["wv_b"].astype(cdt))
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kpe_c[:, :, None, :].astype(k_nope.dtype),
+                                  (B, Sc, H, rd))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_pe], axis=-1)  # [B,T,H,nd+rd]
+    if vd < nd + rd:
+        v_pad = jnp.pad(v_full, ((0, 0), (0, 0), (0, 0), (0, nd + rd - vd)))
+    else:
+        v_pad = v_full
+    return prefill_attend_ref(q_full, k_full, v_pad, base, clens)[..., :vd]
 
 
 def _mla_expanded_decode(cfg, params, q_nope, q_pe, ckv_c, kpe_c, lens, cdt):

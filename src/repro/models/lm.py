@@ -39,13 +39,24 @@ def _temporal_specs(kind: str, cfg: ModelConfig):
     raise ValueError(kind)
 
 
-def _temporal_apply(kind: str, cfg, params, x, positions, cache):
+def _temporal_apply(kind: str, cfg, params, x, positions, cache,
+                    chunk_lens=None):
     if kind == "attn":
-        return B.attn_apply(cfg, params, x, positions, cache, causal=True)
+        return B.attn_apply(cfg, params, x, positions, cache, causal=True,
+                            chunk_lens=chunk_lens)
     if kind == "local":
+        if chunk_lens is not None:
+            raise NotImplementedError(
+                "chunked prefill does not support windowed (local) "
+                "attention: ring cache writes need the full prompt")
         return B.attn_apply(cfg, params, x, positions, cache, causal=True, window=cfg.window)
     if kind == "mla":
-        return B.mla_apply(cfg, params, x, positions, cache)
+        return B.mla_apply(cfg, params, x, positions, cache,
+                           chunk_lens=chunk_lens)
+    if chunk_lens is not None:
+        raise NotImplementedError(
+            f"chunked prefill supports attention-family blocks only, "
+            f"got {kind!r}")
     if kind == "rglru":
         return R.rglru_block_apply(cfg, params, x, cache)
     if kind == "mlstm":
@@ -66,8 +77,9 @@ def _layer_specs(cfg: ModelConfig, tk: str, ck: Optional[str]):
     return specs
 
 
-def _layer_apply(cfg, tk, ck, params, x, positions, cache):
-    x, new_cache = _temporal_apply(tk, cfg, params["t"], x, positions, cache)
+def _layer_apply(cfg, tk, ck, params, x, positions, cache, chunk_lens=None):
+    x, new_cache = _temporal_apply(tk, cfg, params["t"], x, positions, cache,
+                                   chunk_lens)
     aux = jnp.zeros((), jnp.float32)
     if ck == "mlp":
         x = B.mlp_apply(cfg, params["c"], x)
@@ -295,6 +307,7 @@ def lm_apply(
     cache_len=None,
     *,
     block_table=None,
+    chunk_lens=None,
     remat: bool = True,
     last_only: bool = False,
 ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
@@ -308,6 +321,12 @@ def lm_apply(
     ``block_table`` ([B, max_pages] int32) rides alongside a *paged* cache
     (``lm_paged_cache_specs``): it is shared by every layer, so it threads
     through here rather than living in the per-layer cache tree.
+    ``chunk_lens`` ([B] int32, S>1 + cache only) switches prefill to the
+    ragged cache-writing path: ``cache_len`` is then each row's *base*
+    offset (cached-prefix length, scalar or [B]) and row ``b``'s first
+    ``chunk_lens[b]`` tokens append at it — chunked prefill over a warm
+    cache on either KV layout.  Positions default to ``base + arange(S)``
+    per row.
     """
     head, unit, reps, tail = block_pattern(cfg)
     if inputs.ndim == 2:
@@ -316,7 +335,13 @@ def lm_apply(
         x = inputs.astype(cfg.compute_dtype)
     Bsz, S = x.shape[0], x.shape[1]
     if positions is None:
-        if cache_len is not None:
+        if chunk_lens is not None:
+            # ragged chunked prefill: row b's tokens sit at base + [0, S)
+            base = jnp.broadcast_to(
+                jnp.asarray(cache_len if cache_len is not None else 0,
+                            jnp.int32).reshape(-1), (Bsz,))
+            positions = base[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+        elif cache_len is not None:
             cl = jnp.asarray(cache_len)
             if cl.ndim == 1:  # per-slot lengths: each row decodes at its own position
                 positions = cl[:, None].astype(jnp.int32)
@@ -331,7 +356,8 @@ def lm_apply(
     def run_layer(tk, ck, p, x, c):
         cc = (_pack_cache(tk, c, cache_len, block_table)
               if c is not None else None)
-        x, nc, aux = _layer_apply(cfg, tk, ck, p, x, positions, cc)
+        x, nc, aux = _layer_apply(cfg, tk, ck, p, x, positions, cc,
+                                  chunk_lens)
         return x, (_unpack_cache(tk, nc) if nc is not None else None), aux
 
     # head

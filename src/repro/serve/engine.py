@@ -16,16 +16,30 @@ for ``max_len``.  ``kv_layout="contiguous"`` keeps the PR-3 layout (one
 benchmark baseline.
 
 Admission is *continuous*: whenever a slot is free and a request is
-queued, the request is prefilled — ONE jitted full-sequence causal
-forward (``make_prefill_step(with_cache=True)``), not a token-by-token
-replay — and its cache is packed into pages (or slots) *between* decode
-steps.  ``step()`` then runs one fused decode over all occupied slots:
-every row appends and attends at its own length (per-slot vector cache
-lengths), sampling is per-slot (temperature / top-k / seeded PRNG
-streams; greedy default is bit-identical to argmax), finished sequences
-free their slot and pages, and freed capacity is refilled on the next
-step.  A static-batch baseline (``continuous=False``: admit only when
-every slot is free) exists for the serving benchmark's comparison.
+queued, the request binds to the slot and its pages are reserved;
+prefill then proceeds in **bounded chunks** interleaved with decode
+(Sarathi/vLLM-style chunked prefill).  Each ``step()`` spends at most
+``prefill_chunk_tokens`` prompt tokens across the currently-prefilling
+slots — one jitted ragged cache-writing forward
+(``make_prefill_chunk_step``, the prefill kernel in
+``kernels/prefill_attention.py``) appends every row's chunk at its own
+offset straight into the pool/slot cache — and then runs one fused
+decode over the slots whose prefill already finished.  A long prompt
+therefore stalls in-flight decode tails by at most one chunk per step
+instead of its whole length, which is what bounds the inter-token stall
+tail (each request's worst gap, the global p99) under mixed long/short
+workloads.  This retires the old
+whole-prompt prefill scratch (``[nb, prompt_bucket]`` rows packed into
+pages after the fact) and the unbounded per-prompt-bucket jit cache: the
+chunk step writes in place, and its jitted variants are keyed by chunk
+bucket in a small LRU (``prefill_fns_cached`` in ``stats()``).
+Sampling is per-slot (temperature / top-k / seeded PRNG streams; greedy
+default is bit-identical to argmax), finished sequences free their slot
+and pages, and freed capacity is refilled on the next step.  A
+static-batch baseline (``continuous=False``: admit only when every slot
+is free) exists for the serving benchmark's comparison; passing
+``prefill_chunk_tokens=None`` keeps admission whole-prompt (one chunk
+covers the prompt) as the chunking baseline.
 
 The engine is also a *service task body* for the pilot runtime
 (``run_service``): driven through a :class:`~repro.core.task.ServiceControl`,
@@ -54,7 +68,7 @@ from repro.models.lm import lm_cache_specs, lm_paged_cache_specs
 from repro.serve.request import Request, RequestState
 from repro.serve.sampling import make_slot_key, sample_tokens
 from repro.train.state import model_specs
-from repro.train.step import make_decode_step, make_prefill_step
+from repro.train.step import make_decode_step, make_prefill_chunk_step
 
 
 def _bucket(n: int, lo: int = 2) -> int:
@@ -83,19 +97,6 @@ def _tree_bytes(tree) -> int:
     return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
 
 
-_PAGED_NAMES = {"k": "k_pages", "v": "v_pages",
-                "c_kv": "ckv_pages", "k_pe": "kpe_pages"}
-
-
-def _rename_paged(tree):
-    """Rename contiguous prefill-cache leaves to their page-pool names so
-    the pack step's tree.map lines the two trees up."""
-    if isinstance(tree, dict):
-        return {_PAGED_NAMES.get(k, k): _rename_paged(v)
-                for k, v in tree.items()}
-    return tree
-
-
 class ServeEngine:
     """Paged continuous-batching engine for token-LM archs.
 
@@ -104,13 +105,18 @@ class ServeEngine:
     (``run_service(control=...)``).
     """
 
+    # jitted chunk-step variants kept per chunk bucket; small because the
+    # chunk budget bounds the bucket count to log2(budget) + 1
+    _PREFILL_FN_CAP = 8
+
     def __init__(self, cfg: ModelConfig, run_cfg: Optional[RunConfig] = None,
                  *, max_slots: int = 4, max_len: int = 128,
                  params: Any = None, seed: int = 0,
                  continuous: bool = True, idle_wait_s: float = 0.005,
                  kv_layout: str = "paged", page_size: int = 16,
                  num_pages: Optional[int] = None,
-                 decode_impl: Optional[str] = None):
+                 decode_impl: Optional[str] = None,
+                 prefill_chunk_tokens: Optional[int] = 64):
         if cfg.is_encoder_decoder or cfg.input_kind != "tokens":
             raise NotImplementedError("ServeEngine targets token-LM archs")
         if cfg.mrope_sections:
@@ -128,9 +134,15 @@ class ServeEngine:
         self.max_len = max_len
         self.continuous = continuous
         self.idle_wait_s = idle_wait_s
+        if prefill_chunk_tokens is not None and prefill_chunk_tokens < 1:
+            raise ValueError("prefill_chunk_tokens must be >= 1 (or None "
+                             "for whole-prompt prefill)")
         self.paged = kv_layout == "paged"
         self.page_size = page_size
         self.max_pages = -(-max_len // page_size)
+        # per-step prompt-token budget for chunked prefill; None = each
+        # prompt prefills in one chunk (the unchunked baseline)
+        self.prefill_chunk_tokens = prefill_chunk_tokens
         # full backing by default; pass a smaller num_pages to overcommit
         # (max_slots x max_len of *logical* capacity over fewer physical
         # pages — admission backpressures on the free list)
@@ -143,10 +155,13 @@ class ServeEngine:
             # raises at construction for unsupported archs: paged caches
             # need attention-family temporal blocks
             lm_paged_cache_specs(cfg, 1, page_size)
-            self._prefill_fns: Dict[int, Any] = {}
-        else:
-            self._prefill = jax.jit(make_prefill_step(
-                cfg, self.run_cfg, with_cache=True, max_len=max_len))
+        # raises at construction for archs the ragged chunked prefill
+        # cannot serve (recurrent state caches, windowed ring caches)
+        self._prefill_chunk = make_prefill_chunk_step(cfg, self.run_cfg)
+        # chunk-bucket -> jitted chunk step, LRU-capped (satellite of the
+        # old unbounded per-prompt-bucket cache this replaced)
+        self._prefill_fns: "collections.OrderedDict[int, Any]" = (
+            collections.OrderedDict())
         decode = make_decode_step(cfg, self.run_cfg)
         self._sample = jax.jit(sample_tokens)
 
@@ -201,44 +216,6 @@ class ServeEngine:
         self._decode = jax.jit(_step, donate_argnums=(2,),
                                static_argnames=("sampling",))
 
-        if self.paged:
-
-            def _pack(pool, rows, dest):
-                # scatter page-aligned chunks of the freshly prefilled
-                # rows into their allocated pool pages (sentinel dest ids
-                # — padding rows / unallocated chunks — drop)
-                def set_b0(big, small):
-                    nb, pc = small.shape[0], small.shape[1]
-                    ch = small.reshape((nb * (pc // self.page_size),
-                                        self.page_size) + small.shape[2:])
-                    return big.at[dest].set(ch.astype(big.dtype),
-                                            mode="drop")
-
-                def set_b1(big, small):  # scanned unit: [layers, ...]
-                    L, nb, pc = small.shape[0], small.shape[1], small.shape[2]
-                    ch = small.reshape((L, nb * (pc // self.page_size),
-                                        self.page_size) + small.shape[3:])
-                    return big.at[:, dest].set(ch.astype(big.dtype),
-                                               mode="drop")
-
-                return _map_cache(set_b0, set_b1, pool, _rename_paged(rows))
-
-        else:
-
-            def _pack(cache, rows, dest):
-                # copy freshly prefilled cache rows into their slots
-                def set_b0(big, small):
-                    return big.at[dest].set(small.astype(big.dtype),
-                                            mode="drop")
-
-                def set_b1(big, small):  # scanned unit: [layers, batch, ...]
-                    return big.at[:, dest].set(small.astype(big.dtype),
-                                               mode="drop")
-
-                return _map_cache(set_b0, set_b1, cache, rows)
-
-        self._pack = jax.jit(_pack, donate_argnums=(0,))
-
         # _lock guards the state shared with submitter/monitor threads
         # (queue, stats, retrace tracking).  The slot/page fields below
         # (cache, lengths, slots, free_pages, slot_pages, block_table, ...)
@@ -280,6 +257,11 @@ class ServeEngine:
         self.slot_keys = np.zeros((self.max_slots, 2), np.uint32)
         self.slot_temp = np.zeros(self.max_slots, np.float32)
         self.slot_topk = np.zeros(self.max_slots, np.int32)
+        # chunked-prefill progress: tokens of the prompt already written
+        # into the cache, or -1 once the slot is decoding / free
+        self.prefill_pos = np.full(self.max_slots, -1, np.int32)
+        self.slot_prompt: List[Optional[np.ndarray]] = (
+            [None] * self.max_slots)
 
     def checkpoint(self) -> Dict[str, Any]:
         """Snapshot the full serving state (page pool + block tables +
@@ -297,6 +279,8 @@ class ServeEngine:
                 "slot_keys": self.slot_keys.copy(),
                 "slot_temp": self.slot_temp.copy(),
                 "slot_topk": self.slot_topk.copy(),
+                "prefill_pos": self.prefill_pos.copy(),
+                "slot_prompt": list(self.slot_prompt),
             }
             if self.paged:
                 state.update({
@@ -321,6 +305,8 @@ class ServeEngine:
             self.slot_keys = state["slot_keys"].copy()
             self.slot_temp = state["slot_temp"].copy()
             self.slot_topk = state["slot_topk"].copy()
+            self.prefill_pos = state["prefill_pos"].copy()
+            self.slot_prompt = list(state["slot_prompt"])
             if self.paged:
                 self.block_table = state["block_table"].copy()
                 self.free_pages = list(state["free_pages"])
@@ -338,6 +324,8 @@ class ServeEngine:
             self.slot_keys = np.zeros((self.max_slots, 2), np.uint32)
             self.slot_temp = np.zeros(self.max_slots, np.float32)
             self.slot_topk = np.zeros(self.max_slots, np.int32)
+            self.prefill_pos = np.full(self.max_slots, -1, np.int32)
+            self.slot_prompt = [None] * self.max_slots
             if self.paged:
                 self.block_table = np.full(
                     (self.max_slots, self.max_pages), self.num_pages,
@@ -408,9 +396,11 @@ class ServeEngine:
         """Every active slot appends K/V at position ``lengths[i]`` this
         step — allocate the covering page if the sequence just crossed a
         page boundary.  A slot the pool cannot serve fails (its own pages
-        return to the free list, which may unblock the remaining slots)."""
+        return to the free list, which may unblock the remaining slots).
+        Slots still prefilling are skipped: their prompt pages were
+        reserved at admission and they do not decode yet."""
         for i, req in enumerate(self.slots):
-            if req is None:
+            if req is None or self.prefill_pos[i] >= 0:
                 continue
             lp = int(self.lengths[i]) // self.page_size
             if lp < len(self.slot_pages[i]):
@@ -432,6 +422,8 @@ class ServeEngine:
         self.slot_temp[i] = 0.0
         self.slot_topk[i] = 0
         self.slot_keys[i] = 0
+        self.prefill_pos[i] = -1
+        self.slot_prompt[i] = None
         if self.paged:
             self._free_slot_pages(i)
         req._finish(state, error)
@@ -457,21 +449,28 @@ class ServeEngine:
                 or (req.stop_token is not None and tok == req.stop_token)
                 or length >= self.max_len)
 
-    def _get_prefill(self, cache_len: int):
-        """Paged mode: one cache-writing prefill per page-aligned prompt
-        bucket — the prefill scratch is ``[nb, cache_len]``, not
-        ``[nb, max_len]``, so admissions stop paying the full-row
-        rebucketing copies of the contiguous layout."""
-        fn = self._prefill_fns.get(cache_len)
+    def _get_prefill(self, chunk_t: int):
+        """Jitted chunk-step per chunk bucket, LRU-capped at
+        ``_PREFILL_FN_CAP`` — evicting an entry drops its whole compiled
+        family (the paged page-bucket variants live inside one entry's
+        jit cache).  The chunk budget bounds live buckets to
+        ``log2(budget) + 1``, so eviction only fires when callers mix
+        many chunk settings on one engine."""
+        fn = self._prefill_fns.get(chunk_t)
         if fn is None:
-            fn = jax.jit(make_prefill_step(
-                self.cfg, self.run_cfg, with_cache=True, max_len=cache_len))
-            self._prefill_fns[cache_len] = fn
+            fn = jax.jit(self._prefill_chunk, donate_argnums=(4,))
+            self._prefill_fns[chunk_t] = fn
+            if len(self._prefill_fns) > self._PREFILL_FN_CAP:
+                self._prefill_fns.popitem(last=False)
+                self._bump("prefill_fns_evicted")
+        else:
+            self._prefill_fns.move_to_end(chunk_t)
         return fn
 
     def _admit(self) -> int:
-        """Pack queued requests into free slots via batched prefill.
-        Returns the number admitted this call."""
+        """Bind queued requests to free slots (reserving their prompt
+        pages); the actual prompt processing happens chunk-by-chunk in
+        ``_prefill_step``.  Returns the number admitted this call."""
         free = [i for i, r in enumerate(self.slots) if r is None]
         with self._lock:
             if not free or not self.queue:
@@ -516,91 +515,126 @@ class ServeEngine:
         if not batch:
             return 0
         nb = len(batch)
-        # bucket both prefill dims to powers of two so jit retraces stay
-        # bounded; padding rows carry slot index max_slots (or sentinel
-        # page ids), which the drop-mode pack discards
-        nbp = _bucket(nb, lo=1)
-        P = min(_bucket(max(r.prompt_len for r in batch)), self.max_len)
-        tokens = np.zeros((nbp, P), np.int32)
-        lens = np.zeros(nbp, np.int32)
-        for j, req in enumerate(batch):
-            tokens[j, :req.prompt_len] = req.prompt
-            lens[j] = req.prompt_len
-
-        if self.paged:
-            pc = -(-P // self.page_size) * self.page_size
-            ncp = pc // self.page_size
-            self._count_retrace("prefill", (nbp, P, pc))
-            prefill = self._get_prefill(pc)
-            # allocate each row's prompt pages and aim the page-chunk
-            # scatter at them (chunks past a row's allocation drop)
-            dest = np.full(nbp * ncp, self.num_pages, np.int32)
-            for j, req in enumerate(batch):
-                slot = free[j]
-                n_pages = -(-req.prompt_len // self.page_size)
-                if not self._alloc_pages(slot, n_pages):
-                    raise RuntimeError(
-                        "page reservation failed after admission check")
-                dest[j * ncp: j * ncp + n_pages] = self.slot_pages[slot]
-            next_tok, last_logits, rows = prefill(
-                self.params, jnp.asarray(tokens), jnp.asarray(lens))
-            self.cache = self._pack(self.cache, rows, jnp.asarray(dest))
-        else:
-            self._count_retrace("prefill", (nbp, P))
-            slot_idx = np.full(nbp, self.max_slots, np.int32)
-            for j in range(nb):
-                slot_idx[j] = free[j]
-            next_tok, last_logits, rows = self._prefill(
-                self.params, jnp.asarray(tokens), jnp.asarray(lens))
-            self.cache = self._pack(self.cache, rows, jnp.asarray(slot_idx))
-
-        # first token: per-request sampling params + fresh seeded streams
-        # (all-greedy batches keep the prefill's argmax — no sampler call)
-        keys = np.zeros((nbp, 2), np.uint32)
-        temps = np.zeros(nbp, np.float32)
-        topks = np.zeros(nbp, np.int32)
-        for j, req in enumerate(batch):
-            keys[j] = make_slot_key(req.seed)
-            temps[j] = req.temperature
-            topks[j] = req.top_k
-        if any(req.temperature > 0 for req in batch):
-            first_tok, new_keys = self._sample(
-                last_logits, jnp.asarray(keys), jnp.asarray(temps),
-                jnp.asarray(topks))
-            toks = np.asarray(first_tok)
-            new_keys = np.array(new_keys)  # writable (slot_keys mutates)
-        else:
-            toks = np.asarray(next_tok)
-            new_keys = keys
         now = time.time()
         for j, req in enumerate(batch):
             i = free[j]
+            if self.paged:
+                n_pages = -(-req.prompt_len // self.page_size)
+                if not self._alloc_pages(i, n_pages):
+                    raise RuntimeError(
+                        "page reservation failed after admission check")
             self.slots[i] = req
-            self.lengths[i] = req.prompt_len
-            self.slot_keys[i] = new_keys[j]
+            self.lengths[i] = 0  # becomes prompt_len when prefill finishes
+            self.prefill_pos[i] = 0
+            self.slot_prompt[i] = np.asarray(req.prompt, np.int32)
+            self.slot_keys[i] = make_slot_key(req.seed)
             self.slot_temp[i] = req.temperature
             self.slot_topk[i] = req.top_k
             req.state = RequestState.RUNNING
             req.admitted_at = now
-            req.first_token_at = now
-            tok = int(toks[j])
-            req.tokens.append(tok)
-            self.last_tok[i] = tok
-            if self._should_stop(req, tok, int(self.lengths[i])):
-                self._finish_slot(i, RequestState.DONE)
         with self._lock:
             self._stats["admitted"] += nb
             self._stats["prefill_batches"] += 1
-            self._stats["prefill_tokens"] += int(lens.sum())
         return nb
 
+    def _prefill_step(self) -> bool:
+        """Spend up to ``prefill_chunk_tokens`` prompt tokens across the
+        slots still prefilling: ONE jitted ragged chunk forward appends
+        each participating row's next chunk at its own cache offset
+        (inert rows ride with ``chunk_lens == 0``).  Rows whose prompt
+        completes sample their first token here and hand off to decode."""
+        taking: Dict[int, int] = {}
+        budget = (self.prefill_chunk_tokens if self.prefill_chunk_tokens
+                  is not None else self.max_len)
+        used = 0
+        for i, req in enumerate(self.slots):
+            if req is None or self.prefill_pos[i] < 0 or used >= budget:
+                continue
+            take = min(req.prompt_len - int(self.prefill_pos[i]),
+                       budget - used)
+            if take > 0:
+                taking[i] = take
+                used += take
+        if not taking:
+            return False
+        # bucket the chunk width so jit retraces stay bounded; rows not
+        # taking tokens this step ride with chunk_lens 0 (inert in the
+        # ragged kernel — no writes, zero output)
+        T = _bucket(max(taking.values()))
+        tokens = np.zeros((self.max_slots, T), np.int32)
+        base = np.zeros(self.max_slots, np.int32)
+        clens = np.zeros(self.max_slots, np.int32)
+        for i, take in taking.items():
+            pos = int(self.prefill_pos[i])
+            tokens[i, :take] = self.slot_prompt[i][pos:pos + take]
+            base[i] = pos
+            clens[i] = take
+        if self.paged:
+            # bucket the table to the PREFILLING rows' own page frontier
+            # (base + chunk), not the global pages-in-use: tying the
+            # prefill shape to other slots' decode growth would recompile
+            # mid-serve whenever an admission lands on a grown pool
+            need = max(-(-(int(base[i]) + take) // self.page_size)
+                       for i, take in taking.items())
+            mb = min(_bucket(need, lo=1), self.max_pages)
+            self._count_retrace("prefill", (T, mb))
+            bt = jnp.asarray(self.block_table[:, :mb])
+        else:
+            self._count_retrace("prefill", (T,))
+            bt = None
+        prefill = self._get_prefill(T)
+        next_tok, last_logits, self.cache = prefill(
+            self.params, jnp.asarray(tokens), jnp.asarray(base),
+            jnp.asarray(clens), self.cache, bt)
+        done = [i for i, take in taking.items()
+                if int(self.prefill_pos[i]) + take
+                >= self.slots[i].prompt_len]
+        for i, take in taking.items():
+            self.prefill_pos[i] += take
+        # first token for rows that just finished their prompt:
+        # per-request sampling params + the slot's seeded stream
+        # (all-greedy rows keep the chunk step's argmax — no sampler call)
+        if done:
+            if any(self.slot_temp[i] > 0 for i in done):
+                first_tok, new_keys = self._sample(
+                    last_logits, jnp.asarray(self.slot_keys),
+                    jnp.asarray(self.slot_temp),
+                    jnp.asarray(self.slot_topk))
+                toks = np.asarray(first_tok)
+                new_keys = np.asarray(new_keys)
+                for i in done:
+                    if self.slot_temp[i] > 0:
+                        self.slot_keys[i] = new_keys[i]
+            else:
+                toks = np.asarray(next_tok)
+            now = time.time()
+            for i in done:
+                req = self.slots[i]
+                self.lengths[i] = req.prompt_len
+                self.prefill_pos[i] = -1
+                self.slot_prompt[i] = None
+                req.first_token_at = now
+                tok = int(toks[i])
+                req.tokens.append(tok)
+                req.token_times.append(now)
+                self.last_tok[i] = tok
+                if self._should_stop(req, tok, int(self.lengths[i])):
+                    self._finish_slot(i, RequestState.DONE)
+        with self._lock:
+            self._stats["prefill_chunks"] += 1
+            self._stats["prefill_tokens"] += used
+        return True
+
     def step(self) -> bool:
-        """Admit what fits, then run one fused decode over every occupied
-        slot.  Returns False when there was nothing to do."""
+        """Admit what fits, spend one bounded prefill chunk, then run one
+        fused decode over every slot whose prefill already finished.
+        Returns False when there was nothing to do."""
         progressed = self._admit() > 0
+        progressed = self._prefill_step() or progressed
         if self.paged:
             self._ensure_decode_pages()
-        active = np.array([r is not None for r in self.slots])
+        active = np.array([r is not None and self.prefill_pos[i] < 0
+                           for i, r in enumerate(self.slots)])
         if not active.any():
             return progressed
         sampling = bool((self.slot_temp[active] > 0).any())
@@ -614,7 +648,12 @@ class ServeEngine:
             mb = min(_bucket(max(len(p) for p in self.slot_pages), lo=1),
                      self.max_pages)
             self._count_retrace("decode", (mb, sampling))
-            args = args + (jnp.asarray(self.block_table[:, :mb]),)
+            # mid-prefill slots hold REAL allocated pages but must not
+            # decode: mask their table rows to the sentinel so the decode
+            # step's junk appends drop instead of clobbering their prompt
+            bt_step = self.block_table[:, :mb].copy()
+            bt_step[~active] = self.num_pages
+            args = args + (jnp.asarray(bt_step),)
         else:
             self._count_retrace("decode", (self.max_len, sampling))
         next_tok, new_keys, self.cache = self._decode(*args,
@@ -634,11 +673,13 @@ class ServeEngine:
             self._stats["kv_tokens_step_sum"] += int(
                 self.lengths[active].sum())
         generated = 0
+        now = time.time()
         for i, req in enumerate(self.slots):
-            if req is None:
+            if req is None or not active[i]:
                 continue
             tok = int(toks[i])
             req.tokens.append(tok)
+            req.token_times.append(now)
             self.last_tok[i] = tok
             generated += 1
             if self._should_stop(req, tok, int(self.lengths[i])):
@@ -710,6 +751,8 @@ class ServeEngine:
             "max_len": self.max_len,
             "continuous": self.continuous,
             "kv_layout": "paged" if self.paged else "contiguous",
+            "prefill_chunk_tokens": self.prefill_chunk_tokens,
+            "prefill_fns_cached": len(self._prefill_fns),
             "queued": queued,
             "occupied": self.occupancy(),
             "kv_cache_bytes": (self.pages_in_use() * self._page_bytes

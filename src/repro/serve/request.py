@@ -56,6 +56,9 @@ class Request:
     admitted_at: Optional[float] = None
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
+    # per-token emission times (parallel to ``tokens``) — the serving
+    # benchmark's inter-token latency distribution reads the diffs
+    token_times: List[float] = dataclasses.field(default_factory=list)
     _finished: threading.Event = dataclasses.field(
         default_factory=threading.Event, repr=False, compare=False)
 
@@ -74,6 +77,14 @@ class Request:
         if self.first_token_at is None:
             return None
         return self.first_token_at - self.submitted_at
+
+    @property
+    def inter_token_s(self) -> List[float]:
+        """Gaps between consecutive emitted tokens.  Decode stalls caused
+        by other requests' prefills land here — the quantity chunked
+        prefill bounds."""
+        return [b - a for a, b in
+                zip(self.token_times, self.token_times[1:])]
 
     @property
     def latency_s(self) -> Optional[float]:

@@ -164,12 +164,13 @@ def make_prefill_step(cfg: ModelConfig, run_cfg: Optional[RunConfig] = None,
             specs = lm_cache_specs(cfg, B, max_len)
             cache = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype),
                                  specs, is_leaf=is_param)
-            positions = jnp.broadcast_to(
-                jnp.arange(P)[None, :], (B, P)).astype(jnp.int32)
-            # cache_len is a plain 0: the prefill contract requires a
-            # STATICALLY empty cache (blocks._check_prefill_base)
+            # ragged cache-writing prefill at base 0: per-row lengths ride
+            # as chunk_lens, so padding tokens never write K/V and each
+            # row attends exactly its own prompt
             logits, new_cache, _ = lm_apply(
-                cfg, params, tokens, positions, cache, 0, remat=False)
+                cfg, params, tokens, None, cache,
+                jnp.zeros((B,), jnp.int32),
+                chunk_lens=lengths.astype(jnp.int32), remat=False)
             last = jnp.take_along_axis(
                 logits, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1
             )[:, 0]
@@ -192,6 +193,53 @@ def make_prefill_step(cfg: ModelConfig, run_cfg: Optional[RunConfig] = None,
         return constrain(out, ("act_batch", "act_vocab"))
 
     return prefill_step
+
+
+def make_prefill_chunk_step(cfg: ModelConfig,
+                            run_cfg: Optional[RunConfig] = None):
+    """Chunked-prefill step factory (Sarathi-style serving prefill).
+
+    ``chunk_step(params, tokens, base, chunk_lens, cache, block_table=None)``
+    appends a ``[B, T]`` token slab into an EXISTING cache: row ``b``'s
+    first ``chunk_lens[b]`` tokens land at offset ``base[b]`` (its cached
+    prefix length) and attend the full warm prefix through the ragged
+    prefill kernel — rows with ``chunk_lens[b] == 0`` are inert.  Works on
+    both the contiguous slot cache and the paged pool (``block_table``
+    selects paged).  Returns ``(next_token [B], last_logits [B, V],
+    new_cache)`` with the last logits read at each row's final valid chunk
+    position (junk for inert rows — callers gate on their own bookkeeping).
+    Token-LM archs with full-attention temporal blocks only, mirroring
+    ``make_prefill_step(with_cache=True)``.
+    """
+    if cfg.is_encoder_decoder or cfg.input_kind != "tokens":
+        raise NotImplementedError(
+            "chunked prefill targets token-LM archs")
+    from repro.configs.base import block_pattern
+
+    head, unit, _, tail = block_pattern(cfg)
+    kinds = {tk for tk, _ in (*head, *unit, *tail)}
+    if not kinds <= {"attn", "mla"}:
+        raise NotImplementedError(
+            f"chunked prefill supports full-attention blocks only, got "
+            f"{sorted(kinds)} (recurrent state caches need a step-scan "
+            f"prefill; windowed ring caches need per-row length-aware "
+            f"writes)")
+
+    def chunk_step(params, tokens, base, chunk_lens, cache,
+                   block_table=None):
+        base = jnp.asarray(base, jnp.int32)
+        chunk_lens = jnp.asarray(chunk_lens, jnp.int32)
+        logits, new_cache, _ = lm_apply(
+            cfg, params, tokens, None, cache, base,
+            block_table=block_table, chunk_lens=chunk_lens, remat=False)
+        last = jnp.take_along_axis(
+            logits, jnp.maximum(chunk_lens - 1, 0)[:, None, None], axis=1
+        )[:, 0]
+        last = constrain(last, ("act_batch", "act_vocab"))
+        next_token = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        return next_token, last, new_cache
+
+    return chunk_step
 
 
 def make_decode_step(cfg: ModelConfig, run_cfg: Optional[RunConfig] = None):

@@ -93,6 +93,56 @@ def test_engine_admission_eviction_slot_reuse(params):
     assert (eng.lengths == 0).all()
 
 
+def test_chunked_prefill_matches_unchunked_streams(params):
+    """Prompt processing in bounded chunks must not change any token
+    stream: same greedy tokens whether a prompt prefills whole
+    (prefill_chunk_tokens=None) or 8 tokens per step."""
+    rng = np.random.default_rng(3)
+    prompts = _prompts(rng, [21, 3, 14, 9])
+    streams = {}
+    for chunk in (None, 8):
+        eng = ServeEngine(CFG32, RUN, max_slots=2, max_len=64,
+                          params=params, prefill_chunk_tokens=chunk)
+        reqs = [eng.submit(p, max_new_tokens=6) for p in prompts]
+        eng.run_until_drained()
+        assert all(r.state is RequestState.DONE for r in reqs)
+        streams[chunk] = [r.tokens for r in reqs]
+        if chunk is not None:
+            # a 21-token prompt at 8 tokens/step needs >= 3 chunks
+            assert eng.stats()["prefill_chunks"] > len(prompts)
+    assert streams[None] == streams[8]
+
+
+def test_prefill_fn_cache_bounded_and_reported(params):
+    eng = ServeEngine(CFG, RUN, max_slots=2, max_len=32, params=params,
+                      prefill_chunk_tokens=8)
+    rng = np.random.default_rng(1)
+    for p in _prompts(rng, [3, 9, 15, 2, 11]):
+        eng.submit(p, max_new_tokens=2)
+    eng.run_until_drained()
+    stats = eng.stats()
+    assert 1 <= stats["prefill_fns_cached"] <= ServeEngine._PREFILL_FN_CAP
+    assert stats["prefill_chunk_tokens"] == 8
+    # force cache churn well past the cap: eviction, not growth
+    for t in range(ServeEngine._PREFILL_FN_CAP + 3):
+        eng._get_prefill(1000 + t)
+    assert len(eng._prefill_fns) == ServeEngine._PREFILL_FN_CAP
+    assert eng.stats()["prefill_fns_evicted"] >= 3
+
+
+def test_token_times_track_tokens(params):
+    eng = ServeEngine(CFG, RUN, max_slots=2, max_len=64, params=params,
+                      prefill_chunk_tokens=4)
+    rng = np.random.default_rng(2)
+    reqs = [eng.submit(p, max_new_tokens=5) for p in _prompts(rng, [10, 4])]
+    eng.run_until_drained()
+    for r in reqs:
+        assert len(r.token_times) == len(r.tokens)
+        assert r.token_times == sorted(r.token_times)
+        assert len(r.inter_token_s) == len(r.tokens) - 1
+        assert r.token_times[0] == r.first_token_at
+
+
 def test_engine_rejects_oversized_prompt(params):
     eng = ServeEngine(CFG, RUN, max_slots=1, max_len=16, params=params)
     bad = eng.submit(np.ones(16, np.int32), max_new_tokens=2)
