@@ -13,12 +13,13 @@ def main() -> None:
     ap.add_argument("--which", default="all",
                     help="comma list: forecasting,hydrology,scaling,"
                          "multi_pipeline,concurrent,roofline,serving,"
-                         "decode_kernel")
+                         "decode_kernel,fleet")
     args = ap.parse_args()
     from benchmarks import paper_tables as P
     from benchmarks import roofline as R
     from benchmarks.concurrent_pipelines import bench_concurrent_pipelines
     from benchmarks.decode_kernel import bench_decode_kernel
+    from benchmarks.fleet import bench_fleet
     from benchmarks.serving import bench_serving
 
     benches = {
@@ -30,6 +31,7 @@ def main() -> None:
         "roofline": R.bench_roofline,            # beyond-paper: §Roofline
         "serving": bench_serving,                # beyond-paper: continuous batching
         "decode_kernel": bench_decode_kernel,    # beyond-paper: paged flash-decode
+        "fleet": bench_fleet,                    # beyond-paper: multi-engine router
     }
     which = list(benches) if args.which == "all" else args.which.split(",")
     print("name,us_per_call,derived")

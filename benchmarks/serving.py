@@ -45,26 +45,13 @@ if __name__ == "__main__":
 import numpy as np
 
 from benchmarks.results_io import bench_json, merge_record
+from benchmarks.workload import (
+    mixed_workload as _mixed_workload,
+    percentile as _percentile,
+    poisson_workload as _workload,
+)
 
 RESULTS_JSON = bench_json("serving")
-
-
-def _workload(n_requests: int, seed: int = 0, scale: float = 0.002):
-    """Mixed-length prompts/budgets + exponential inter-arrival offsets.
-    Generation budgets span 4-48 tokens: the wide spread is what makes
-    static batching hold finished slots hostage to the batch straggler.
-    The 2ms mean gap keeps the engine *capacity-bound* — the paged/kernel
-    engines run fast enough that the original 10ms arrivals left 8+ slot
-    runs arrival-bound, where every admission policy looks the same."""
-    rng = np.random.default_rng(seed)
-    prompt_lens = rng.integers(4, 9, n_requests)
-    gens = rng.integers(4, 49, n_requests)
-    gaps = rng.exponential(scale=scale, size=n_requests)
-    arrivals = np.cumsum(gaps)
-    arrivals[0] = 0.0
-    prompts = [rng.integers(1, 250, int(l)).astype(np.int32)
-               for l in prompt_lens]
-    return list(zip(arrivals, prompts, gens))
 
 
 def _drive(engine, workload):
@@ -87,11 +74,6 @@ def _drive(engine, workload):
         if not engine.step() and i < len(pending):
             time.sleep(min(0.001, max(0.0, pending[i][0] - now)))
     return reqs, time.time() - t0
-
-
-def _percentile(xs, q):
-    xs = sorted(xs)
-    return xs[min(len(xs) - 1, int(q * len(xs)))]
 
 
 def _warm_engine(eng, slots, max_gen):
@@ -217,26 +199,6 @@ def _bench_layouts(cfg, params, slots, n_requests, quick):
         paged["kv_bytes_per_token"] / max(base["kv_bytes_per_token"], 1e-9),
         3)
     return out
-
-
-def _mixed_workload(n_requests: int, seed: int = 0, scale: float = 0.002):
-    """Mostly-short prompts with a long-prompt tail (~80% at 4-16 tokens,
-    ~20% at 96-160): the workload where whole-prompt prefill hurts — a
-    long admission stalls every in-flight decode for its full prompt,
-    which is exactly what the inter-token stall tail (each request's
-    worst gap, the global p99) measures."""
-    rng = np.random.default_rng(seed)
-    is_long = rng.random(n_requests) < 0.2
-    is_long[: max(2, n_requests // 16)] = True  # tail guaranteed present
-    prompt_lens = np.where(is_long, rng.integers(96, 161, n_requests),
-                           rng.integers(4, 17, n_requests))
-    gens = rng.integers(8, 25, n_requests)
-    gaps = rng.exponential(scale=scale, size=n_requests)
-    arrivals = np.cumsum(gaps)
-    arrivals[0] = 0.0
-    prompts = [rng.integers(1, 250, int(l)).astype(np.int32)
-               for l in prompt_lens]
-    return list(zip(arrivals, prompts, gens))
 
 
 def _warm_chunk_shapes(eng):

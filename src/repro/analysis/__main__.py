@@ -33,6 +33,7 @@ LOCK_FILES = [
     SRC_ROOT / "core" / "session.py",
     SRC_ROOT / "core" / "task.py",
     SRC_ROOT / "serve" / "engine.py",
+    SRC_ROOT / "serve" / "router.py",
 ]
 
 ALL_PASSES = ("locks", "jit", "kernels", "excepts")

@@ -9,8 +9,16 @@ a single decode step.  The service stage holds its lease, is excluded
 from the pipeline completion barrier, and yields to higher-priority
 training work via checkpoint/resume preemption (see ``repro.serve``).
 
+``--fleet N`` switches to the multi-engine gateway: an ``EngineRouter``
+load-balances the same request stream over N engines (optionally
+prefill/decode-disaggregated with ``--disaggregate``) and this driver
+becomes a streaming front-end — it polls each request's live token list
+and emits deltas as they land, the way a gateway would flush SSE chunks.
+
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --smoke \
       --batch 4 --prompt-len 32 --gen 16 [--slots 4]
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --smoke \
+      --batch 12 --fleet 3 --disaggregate
 """
 from __future__ import annotations
 
@@ -26,10 +34,91 @@ from repro.core.pilot import PilotDescription
 from repro.serve import Request, ServeEngine
 
 
+def _stream(requests, *, poll_s: float = 0.02, timeout: float = 600.0,
+            quiet: bool = False) -> None:
+    """Gateway-style streaming loop: ``Request.tokens`` is the live
+    stream (the engine appends in place; ``_finish`` only stamps
+    terminal state), so polling its length and flushing the delta is
+    exactly what an SSE front-end would do per chunk."""
+    seen = [0] * len(requests)
+    deadline = time.time() + timeout
+    while True:
+        live = False
+        for i, r in enumerate(requests):
+            n = len(r.tokens)
+            if n > seen[i] and not quiet:
+                done = " done" if r.done() else ""
+                print(f"[stream] {r.rid}: +{n - seen[i]} tok "
+                      f"({n} total){done}", flush=True)
+            seen[i] = n
+            if not r.done():
+                live = True
+            elif r.error is not None:
+                raise RuntimeError(f"{r.rid} failed: {r.error}")
+        if not live:
+            return
+        if time.time() > deadline:
+            raise RuntimeError("streaming front-end timed out")
+        time.sleep(poll_s)
+
+
+def run_fleet(args, cfg) -> dict:
+    """Multi-engine gateway: EngineRouter over ``--fleet`` engines with
+    load-aware admission; ``--disaggregate`` splits prefill/decode roles
+    and migrates finished prompts by KV-page handoff."""
+    from repro.serve import build_fleet
+
+    slots = args.slots or min(args.batch, 4)
+    max_len = args.prompt_len + args.gen + 1
+    router = build_fleet(cfg, RunConfig(), num_engines=args.fleet,
+                         disaggregate=args.disaggregate, seed=0,
+                         max_slots=slots, max_len=max_len,
+                         name_prefix="gateway")
+    router.start()
+    try:
+        rng = np.random.default_rng(1)
+        t0 = time.time()
+        requests = [
+            router.submit(Request(
+                rng.integers(1, cfg.vocab_size, args.prompt_len),
+                max_new_tokens=args.gen))
+            for _ in range(args.batch)]
+        _stream(requests, quiet=args.quiet)
+        wall = time.time() - t0
+        stats = router.stats()
+    finally:
+        router.close()
+    n_tok = sum(len(r.tokens) for r in requests)
+    ttft = sorted(r.ttft_s for r in requests)
+    res = {
+        "requests": len(requests),
+        "engines": args.fleet,
+        "disaggregate": args.disaggregate,
+        "generated_tokens": n_tok,
+        "tokens_per_s": n_tok / max(wall, 1e-9),
+        "ttft_p50_s": ttft[len(ttft) // 2],
+        "routed": stats.get("routed", 0),
+        "handoffs": stats.get("handoffs_routed", 0),
+        "router": stats,
+    }
+    spread = {k.split("routed_to.")[1]: v for k, v in stats.items()
+              if k.startswith("routed_to.")}
+    print(f"[serve] {cfg.name} fleet={args.fleet}"
+          f"{' disaggregated' if args.disaggregate else ''}: "
+          f"{res['tokens_per_s']:.1f} tok/s over {len(requests)} reqs; "
+          f"p50 ttft {res['ttft_p50_s']*1e3:.0f}ms; routed {spread}"
+          + (f"; handoffs {res['handoffs']}" if args.disaggregate else ""))
+    return res
+
+
 def run(args) -> dict:
     cfg = get_config(args.arch, smoke=args.smoke)
     if cfg.is_encoder_decoder or cfg.input_kind == "embeds":
         raise SystemExit("serve driver targets token-LM archs")
+    if args.fleet > 1 or args.disaggregate:
+        if args.disaggregate and args.fleet < 2:
+            raise SystemExit("--disaggregate needs --fleet >= 2")
+        return run_fleet(args, cfg)
     slots = args.slots or min(args.batch, 4)
     max_len = args.prompt_len + args.gen + 1
     engine = ServeEngine(cfg, RunConfig(), max_slots=slots, max_len=max_len,
@@ -104,6 +193,13 @@ def build_parser():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--slots", type=int, default=0,
                     help="KV-cache slots (0 = min(batch, 4))")
+    ap.add_argument("--fleet", type=int, default=1,
+                    help="number of engines behind the router gateway")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="split the fleet into prefill/decode engines "
+                         "joined by KV-page handoff")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress per-request streaming deltas")
     return ap
 
 

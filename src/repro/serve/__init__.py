@@ -9,9 +9,17 @@ occupied slots (``kernels/ops.decode_attention{_paged}``), per-slot
 temperature/top-k sampling with seeded PRNG streams, admission between
 steps, and checkpoint/yield/resume under priority preemption (see
 ``core/task.py`` ServiceControl).
+
+``EngineRouter`` (+ ``build_fleet``) is the fleet layer: a shared,
+load-aware request queue over N engines with rolling restarts and
+prefill/decode disaggregation — finished prompts migrate between
+engines as ``KVHandoff`` page blocks through the Transport.
 """
 from repro.serve.engine import ServeEngine
+from repro.serve.handoff import KVHandoff
 from repro.serve.request import Request, RequestState
+from repro.serve.router import EngineRouter, build_fleet
 from repro.serve.sampling import sample_tokens
 
-__all__ = ["ServeEngine", "Request", "RequestState", "sample_tokens"]
+__all__ = ["ServeEngine", "Request", "RequestState", "sample_tokens",
+           "KVHandoff", "EngineRouter", "build_fleet"]

@@ -53,6 +53,7 @@ and the next attempt restores from the checkpoint and keeps serving.
 from __future__ import annotations
 
 import collections
+import itertools
 import threading
 import time
 from typing import Any, Deque, Dict, List, Optional
@@ -65,10 +66,19 @@ from repro.common.params import init_params, is_param
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core.task import ServiceControl, ServicePreempted
 from repro.models.lm import lm_cache_specs, lm_paged_cache_specs
+from repro.serve.handoff import KVHandoff
 from repro.serve.request import Request, RequestState
 from repro.serve.sampling import make_slot_key, sample_tokens
 from repro.train.state import model_specs
 from repro.train.step import make_decode_step, make_prefill_chunk_step
+
+_engine_uid = itertools.count()
+
+
+def _entry_submitted_at(entry) -> float:
+    """Submission time of a queue entry (Request or migrated KVHandoff)."""
+    return (entry.request.submitted_at if isinstance(entry, KVHandoff)
+            else entry.submitted_at)
 
 
 def _bucket(n: int, lo: int = 2) -> int:
@@ -116,7 +126,9 @@ class ServeEngine:
                  kv_layout: str = "paged", page_size: int = 16,
                  num_pages: Optional[int] = None,
                  decode_impl: Optional[str] = None,
-                 prefill_chunk_tokens: Optional[int] = 64):
+                 prefill_chunk_tokens: Optional[int] = 64,
+                 prefill_only: bool = False,
+                 name: Optional[str] = None):
         if cfg.is_encoder_decoder or cfg.input_kind != "tokens":
             raise NotImplementedError("ServeEngine targets token-LM archs")
         if cfg.mrope_sections:
@@ -126,10 +138,17 @@ class ServeEngine:
             raise ValueError("need max_slots >= 1 and max_len >= 2")
         if kv_layout not in ("paged", "contiguous"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
+        if prefill_only and kv_layout != "paged":
+            raise ValueError("prefill_only engines require kv_layout="
+                             "'paged' (handoff ships page blocks)")
         if decode_impl is not None:
             cfg = cfg.with_overrides(decode_impl=decode_impl)
         self.cfg = cfg
         self.run_cfg = run_cfg or RunConfig()
+        self.uid = name or f"engine{next(_engine_uid):03d}"
+        # prefill-specialised role: finished prompts are exported as
+        # KVHandoff page blocks instead of decoding in place
+        self.prefill_only = prefill_only
         self.max_slots = max_slots
         self.max_len = max_len
         self.continuous = continuous
@@ -222,7 +241,9 @@ class ServeEngine:
         # are owned by the engine thread that calls step(); checkpoint()/
         # restore()/_release_state() snapshot them under _lock.
         self._lock = threading.Lock()
-        self.queue: Deque[Request] = collections.deque()  # guarded-by: _lock
+        self.queue: Deque[Any] = collections.deque()  # guarded-by: _lock
+        # finished prefills parked for the router's handoff mover
+        self._outbox: Deque[KVHandoff] = collections.deque()  # guarded-by: _lock
         self.cache = None
         self.lengths = np.zeros(max_slots, np.int32)
         self.last_tok = np.zeros(max_slots, np.int32)
@@ -275,6 +296,7 @@ class ServeEngine:
                 "last_tok": self.last_tok.copy(),
                 "slots": list(self.slots),
                 "queue": list(self.queue),
+                "outbox": list(self._outbox),
                 "stats": dict(self._stats),
                 "slot_keys": self.slot_keys.copy(),
                 "slot_temp": self.slot_temp.copy(),
@@ -301,6 +323,7 @@ class ServeEngine:
             self.last_tok = state["last_tok"].copy()
             self.slots = list(state["slots"])
             self.queue = collections.deque(state["queue"])
+            self._outbox = collections.deque(state.get("outbox", ()))
             self._stats = collections.defaultdict(int, state["stats"])
             self.slot_keys = state["slot_keys"].copy()
             self.slot_temp = state["slot_temp"].copy()
@@ -321,6 +344,7 @@ class ServeEngine:
             self.lengths = np.zeros(self.max_slots, np.int32)
             self.last_tok = np.zeros(self.max_slots, np.int32)
             self.queue = collections.deque()
+            self._outbox = collections.deque()
             self.slot_keys = np.zeros((self.max_slots, 2), np.uint32)
             self.slot_temp = np.zeros(self.max_slots, np.float32)
             self.slot_topk = np.zeros(self.max_slots, np.int32)
@@ -336,12 +360,42 @@ class ServeEngine:
     # -- client side ---------------------------------------------------------
 
     def submit(self, request, **kw) -> Request:
-        """Queue a request (a :class:`Request` or a raw prompt array)."""
+        """Queue a request (a :class:`Request`, a raw prompt array, or a
+        migrated :class:`KVHandoff` from a prefill engine)."""
+        if isinstance(request, KVHandoff):
+            if not self.paged:
+                raise ValueError(
+                    "KVHandoff import needs a paged engine")
+            if request.page_size != self.page_size:
+                raise ValueError(
+                    f"handoff page_size {request.page_size} != engine "
+                    f"page_size {self.page_size}")
+            with self._lock:
+                self.queue.append(request)
+            return request.request
         if not isinstance(request, Request):
             request = Request(np.asarray(request, np.int32), **kw)
         with self._lock:
             self.queue.append(request)
         return request
+
+    def take_handoffs(self) -> List[KVHandoff]:
+        """Pop every exported prefill (the router's handoff mover ships
+        these through the transport into a decode engine)."""
+        with self._lock:
+            out = list(self._outbox)
+            self._outbox.clear()
+        return out
+
+    def steal_queued(self) -> List[Any]:
+        """Pop every queued-but-unbound entry so a router can re-route
+        it away from a draining or preempted engine.  Bound slots are
+        not touched — they finish here or ride the preemption
+        checkpoint."""
+        with self._lock:
+            out = list(self.queue)
+            self.queue.clear()
+        return out
 
     def has_work(self) -> bool:
         with self._lock:
@@ -354,6 +408,29 @@ class ServeEngine:
     def pages_in_use(self) -> int:
         with self._lock:  # cross-thread monitoring read
             return self.num_pages - len(self.free_pages) if self.paged else 0
+
+    def admission_signals(self) -> Dict[str, Any]:
+        """One-lock snapshot of the signals a fleet router admits on:
+        slot occupancy, page-pool pressure, and queue depth/age.  For
+        contiguous engines the page figures degrade to free slots (each
+        slot owns its full row, so slots are the only capacity axis)."""
+        with self._lock:
+            now = time.time()
+            occupied = sum(r is not None for r in self.slots)
+            return {
+                "engine": self.uid,
+                "prefill_only": self.prefill_only,
+                "occupied": occupied,
+                "max_slots": self.max_slots,
+                "queue_depth": len(self.queue),
+                "oldest_queued_age_s": (
+                    now - min(_entry_submitted_at(e) for e in self.queue)
+                    if self.queue else 0.0),
+                "free_pages": (len(self.free_pages) if self.paged
+                               else self.max_slots - occupied),
+                "num_pages": (self.num_pages if self.paged
+                              else self.max_slots),
+            }
 
     def _bump(self, key: str, n: int = 1) -> None:
         with self._lock:
@@ -429,6 +506,57 @@ class ServeEngine:
         req._finish(state, error)
         self._bump("completed" if state is RequestState.DONE else "failed")
 
+    def _pad_pids(self, pids: np.ndarray) -> np.ndarray:
+        """Pad a page-id list to its power-of-two bucket by repeating the
+        last id: the gather/scatter XLA shapes stay bounded to
+        ``log2(max_pages) + 1`` variants instead of one per distinct page
+        count (an eager compile inside the serving hot path otherwise).
+        Duplicate ids are safe — every duplicate carries the same block,
+        so scatter order cannot change the result."""
+        b = min(_bucket(max(len(pids), 1), lo=1), self.max_pages)
+        if b == len(pids):
+            return pids
+        return np.concatenate(
+            [pids, np.full(b - len(pids), pids[-1], np.int32)])
+
+    def _export_slot(self, i: int) -> None:
+        """Prefill-only handoff: gather exactly the slot's own pages out
+        of the pool (a block copy addressed by the block-table row — the
+        pool itself never ships) and park them in the outbox as a
+        :class:`KVHandoff`.  The slot unbinds WITHOUT finishing the
+        request: it stays RUNNING and completes on the importing decode
+        engine."""
+        req = self.slots[i]
+        pids = np.asarray(self.slot_pages[i], np.int32)
+        n = len(pids)
+        padded = jnp.asarray(self._pad_pids(pids))
+        self._count_retrace("handoff_gather", int(padded.shape[0]))
+        # gather at the bucketed width, ship only the owned pages
+        pages = _map_cache(lambda l: np.asarray(l[padded])[:n],
+                           lambda l: np.asarray(l[:, padded])[:, :n],
+                           self.cache)
+        hand = KVHandoff(
+            request=req, length=int(self.lengths[i]),
+            last_tok=int(self.last_tok[i]),
+            slot_key=self.slot_keys[i].copy(),
+            temperature=float(self.slot_temp[i]),
+            top_k=int(self.slot_topk[i]), pages=pages,
+            n_pages=len(self.slot_pages[i]), page_size=self.page_size,
+            kv_bytes=_tree_bytes(pages), source=self.uid)
+        self.slots[i] = None
+        self.lengths[i] = 0
+        self.last_tok[i] = 0
+        self.slot_temp[i] = 0.0
+        self.slot_topk[i] = 0
+        self.slot_keys[i] = 0
+        self.prefill_pos[i] = -1
+        self.slot_prompt[i] = None
+        self._free_slot_pages(i)
+        with self._lock:
+            self._outbox.append(hand)
+            self._stats["handoffs_exported"] += 1
+            self._stats["handoff_bytes_exported"] += hand.kv_bytes
+
     def _fail_outstanding(self, error: str) -> None:
         """Terminate every accepted-but-unfinished request (hard stop):
         waiters block on Request.wait(), so abandoning them silently would
@@ -438,11 +566,13 @@ class ServeEngine:
                 self._finish_slot(i, RequestState.FAILED, error)
         with self._lock:
             queued, self.queue = list(self.queue), collections.deque()
-        for req in queued:
+            handed, self._outbox = list(self._outbox), collections.deque()
+        for entry in queued + handed:
             # _finish runs callbacks — keep it outside the lock
+            req = entry.request if isinstance(entry, KVHandoff) else entry
             req._finish(RequestState.FAILED, error)
-        if queued:
-            self._bump("failed", len(queued))
+        if queued or handed:
+            self._bump("failed", len(queued) + len(handed))
 
     def _should_stop(self, req: Request, tok: int, length: int) -> bool:
         return (len(req.tokens) >= req.max_new_tokens
@@ -477,10 +607,28 @@ class ServeEngine:
                 return 0
             if not self.continuous and len(free) < self.max_slots:
                 return 0  # static batching: wait for the whole batch to end
-            batch: List[Request] = []
+            batch: List[Any] = []
             reserved = 0
             while self.queue and len(batch) < len(free):
                 req = self.queue[0]
+                if isinstance(req, KVHandoff):
+                    # migrated prefill: its own pages plus one
+                    # decode-growth page (same rule as a fresh prompt)
+                    need = min(req.n_pages + 1, self.max_pages)
+                    if need > self.num_pages:
+                        self.queue.popleft()
+                        req.request._finish(
+                            RequestState.FAILED,
+                            f"handoff needs {need} pages of "
+                            f"{self.page_size} but the pool only has "
+                            f"{self.num_pages}")
+                        self._stats["failed"] += 1
+                        continue
+                    if reserved + need > len(self.free_pages):
+                        break  # FIFO backpressure, same as prompts
+                    reserved += need
+                    batch.append(self.queue.popleft())
+                    continue
                 if req.prompt_len > self.max_len - 1:
                     self.queue.popleft()
                     req._finish(RequestState.FAILED,
@@ -518,6 +666,9 @@ class ServeEngine:
         now = time.time()
         for j, req in enumerate(batch):
             i = free[j]
+            if isinstance(req, KVHandoff):
+                self._import_handoff(i, req, now)
+                continue
             if self.paged:
                 n_pages = -(-req.prompt_len // self.page_size)
                 if not self._alloc_pages(i, n_pages):
@@ -536,6 +687,54 @@ class ServeEngine:
             self._stats["admitted"] += nb
             self._stats["prefill_batches"] += 1
         return nb
+
+    def _import_handoff(self, i: int, hand: KVHandoff,
+                        now: float) -> None:
+        """Bind a migrated prefill: allocate exactly its page count,
+        scatter the shipped blocks into this engine's pool (a
+        block-table rewrite — page ids change, intra-page offsets do
+        not), and enter decode directly: ``prefill_pos`` stays -1, the
+        prompt never replays."""
+        if not self._alloc_pages(i, hand.n_pages):
+            raise RuntimeError(
+                "page reservation failed after admission check")
+        raw = np.asarray(self.slot_pages[i], np.int32)
+        padded = self._pad_pids(raw)
+        b = len(padded)
+        self._count_retrace("handoff_scatter", b)
+
+        def _pad_rows(d, axis):
+            # repeat the last shipped block out to the bucket width: the
+            # duplicate page ids then write identical data, so the scatter
+            # stays deterministic while the XLA shape stays bucketed
+            n = d.shape[axis]
+            if n == b:
+                return d
+            last = d[-1:] if axis == 0 else d[:, -1:]
+            return np.concatenate([d, np.repeat(last, b - n, axis=axis)],
+                                  axis=axis)
+
+        pids = jnp.asarray(padded)
+        self.cache = _map_cache(
+            lambda l, d: l.at[pids].set(jnp.asarray(_pad_rows(d, 0), l.dtype)),
+            lambda l, d: l.at[:, pids].set(
+                jnp.asarray(_pad_rows(d, 1), l.dtype)),
+            self.cache, hand.pages)
+        req = hand.request
+        self.slots[i] = req
+        self.lengths[i] = hand.length
+        self.last_tok[i] = hand.last_tok
+        self.prefill_pos[i] = -1
+        self.slot_prompt[i] = None
+        self.slot_keys[i] = hand.slot_key
+        self.slot_temp[i] = hand.temperature
+        self.slot_topk[i] = hand.top_k
+        req.state = RequestState.RUNNING
+        if req.admitted_at is None:
+            req.admitted_at = now
+        with self._lock:
+            self._stats["handoffs_imported"] += 1
+            self._stats["handoff_bytes_imported"] += hand.kv_bytes
 
     def _prefill_step(self) -> bool:
         """Spend up to ``prefill_chunk_tokens`` prompt tokens across the
@@ -620,6 +819,8 @@ class ServeEngine:
                 self.last_tok[i] = tok
                 if self._should_stop(req, tok, int(self.lengths[i])):
                     self._finish_slot(i, RequestState.DONE)
+                elif self.prefill_only:
+                    self._export_slot(i)
         with self._lock:
             self._stats["prefill_chunks"] += 1
             self._stats["prefill_tokens"] += used
@@ -743,29 +944,45 @@ class ServeEngine:
     # -- reporting -----------------------------------------------------------
 
     def stats(self) -> Dict[str, Any]:
+        # the router's admission signals (queue depth/age, free pages,
+        # occupancy) are snapshotted under ONE _lock acquisition so they
+        # are mutually consistent
         with self._lock:
             out = dict(self._stats)
+            now = time.time()
             queued = len(self.queue)
+            oldest = (now - min(_entry_submitted_at(e)
+                                for e in self.queue)
+                      if self.queue else 0.0)
+            free_pages = len(self.free_pages) if self.paged else 0
+            occupied = sum(r is not None for r in self.slots)
+        in_use = self.num_pages - free_pages
         out.update({
+            "engine": self.uid,
             "max_slots": self.max_slots,
             "max_len": self.max_len,
             "continuous": self.continuous,
+            "prefill_only": self.prefill_only,
             "kv_layout": "paged" if self.paged else "contiguous",
             "prefill_chunk_tokens": self.prefill_chunk_tokens,
             "prefill_fns_cached": len(self._prefill_fns),
             "queued": queued,
-            "occupied": self.occupancy(),
-            "kv_cache_bytes": (self.pages_in_use() * self._page_bytes
+            "queue_depth": queued,
+            "oldest_queued_age_s": oldest,
+            "occupied": occupied,
+            "kv_cache_bytes": (in_use * self._page_bytes
                                if self.paged else self._cache_bytes),
             "kv_cache_capacity_bytes": (
                 self.num_pages * self._page_bytes if self.paged
                 else self._cache_bytes),
         })
         if self.paged:
+            out.setdefault("peak_pages", 0)
             out.update({
                 "page_size": self.page_size,
                 "num_pages": self.num_pages,
-                "pages_in_use": self.pages_in_use(),
+                "pages_in_use": in_use,
+                "free_pages": free_pages,
                 "kv_cache_peak_bytes": (out.get("peak_pages", 0)
                                         * self._page_bytes),
             })

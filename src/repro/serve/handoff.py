@@ -1,0 +1,58 @@
+"""KV handoff: migrating a prefilled request between paged engines.
+
+Prefill/decode disaggregation ships a finished prompt from a
+prefill-specialised :class:`~repro.serve.engine.ServeEngine` to a decode
+engine.  Because both engines keep their KV in a shared page pool
+addressed by per-slot block tables (PR 5), the migration is a **block
+copy + block-table rewrite**, never a cache copy: the exporter gathers
+exactly the pages its block-table row points at (``ceil(prompt_len /
+page_size)`` of them), and the importer scatters them into freshly
+allocated pages of its own pool and writes a new block-table row.  The
+bytes that cross the transport are therefore bounded by the pages the
+*request* owns — the pool itself never moves (asserted in
+tests/test_fleet.py).
+
+A :class:`KVHandoff` rides the normal engine queue: the router delivers
+it through a :class:`~repro.core.transport.Transport` into the decode
+engine's ``submit``, and the decode engine's own thread performs the
+import inside ``_admit`` (all cache mutation stays on the engine
+thread, per the engine's ownership contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.serve.request import Request
+
+
+@dataclasses.dataclass
+class KVHandoff:
+    """A prefilled request plus the page blocks backing its KV.
+
+    ``pages`` mirrors the engine cache tree (``head_layers`` /
+    ``unit`` / ``tail_layers``) with every pool leaf reduced to the
+    request's own pages: ``[n_pages, page_size, ...]`` for per-layer
+    leaves, ``[layers, n_pages, page_size, ...]`` for the scanned unit.
+    Page *order* is the block-table row order, so intra-page offsets
+    survive the move — a prompt whose tail straddles into a partially
+    filled page keeps decoding into that page on the importing side.
+    """
+
+    request: Request
+    length: int                 # tokens already written into the pages
+    last_tok: int               # the first generated token (feeds decode)
+    slot_key: np.ndarray        # [2] uint32 sampling PRNG key, post-advance
+    temperature: float
+    top_k: int
+    pages: Any                  # cache-shaped pytree of gathered page blocks
+    n_pages: int
+    page_size: int
+    kv_bytes: int               # total bytes in ``pages`` (transport cost)
+    source: str = ""            # exporting engine's uid (stats/debugging)
+
+    @property
+    def rid(self) -> str:
+        return self.request.rid
