@@ -13,7 +13,7 @@ def main() -> None:
     ap.add_argument("--which", default="all",
                     help="comma list: forecasting,hydrology,scaling,"
                          "multi_pipeline,concurrent,roofline,serving,"
-                         "decode_kernel,fleet")
+                         "decode_kernel,fleet,transport")
     args = ap.parse_args()
     from benchmarks import paper_tables as P
     from benchmarks import roofline as R
@@ -21,6 +21,7 @@ def main() -> None:
     from benchmarks.decode_kernel import bench_decode_kernel
     from benchmarks.fleet import bench_fleet
     from benchmarks.serving import bench_serving
+    from benchmarks.transport import bench_transport
 
     benches = {
         "hydrology": P.bench_hydrology,          # paper Tables 1-2
@@ -32,6 +33,7 @@ def main() -> None:
         "serving": bench_serving,                # beyond-paper: continuous batching
         "decode_kernel": bench_decode_kernel,    # beyond-paper: paged flash-decode
         "fleet": bench_fleet,                    # beyond-paper: multi-engine router
+        "transport": bench_transport,            # beyond-paper: cross-process exec
     }
     which = list(benches) if args.which == "all" else args.which.split(",")
     print("name,us_per_call,derived")

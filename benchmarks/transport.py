@@ -1,0 +1,237 @@
+"""Cross-process transport overhead + multi-pipeline overlap (ISSUE 9).
+
+Three questions about ``repro.core.exec.SubprocessTransport``:
+
+1. **Startup** — what does a worker-daemon pool cost before the first
+   result comes back (process spawn + jax import + hello/ready RPC)?
+2. **RPC round-trip** — steady-state per-task overhead of the
+   length-prefixed pickle channel vs an in-process thread hop.
+3. **Overlap** — N single-stage pipelines with *GIL-bound* bodies run
+   through a Session: in-process threads serialise on the interpreter
+   lock, subprocess workers genuinely parallelise.  This is the workload
+   class the transport exists for (the paper's data-engineering stages
+   are exactly such Python-heavy bodies).
+
+Startup is amortised by design — workers are long-lived daemons, so the
+pool cost is paid once per Session, not per task; the recorded number is
+what that amortisation buys.  Results merge into
+``results/bench/transport.json``.
+
+Run standalone (forces a multi-device host pool before importing jax):
+
+  PYTHONPATH=src python -m benchmarks.transport [--quick|--full]
+
+or through the harness: ``python -m benchmarks.run --which transport``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if __name__ == "__main__":  # standalone: emulate a device pool pre-jax
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    if getattr(sys.modules["__main__"], "__spec__", None) is None:
+        # invoked as `python benchmarks/transport.py`: a spec-less
+        # __main__ can't satisfy the picklable-task contract (workers
+        # import task fns by qualified name), so re-enter through runpy,
+        # which runs the module AS `python -m benchmarks.transport`
+        import runpy
+        runpy.run_module("benchmarks.transport", run_name="__main__",
+                         alter_sys=True)
+        sys.exit(0)
+
+import time
+from typing import List, Tuple
+
+import jax
+
+from repro.core import StageGraph, stage
+
+RESULTS_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "results", "bench", "transport.json")
+
+
+def _ping(x):
+    """Trivial task: measures pure channel + scheduling overhead."""
+    return x
+
+
+def _cores() -> int:
+    try:
+        return len(os.sched_getaffinity(0))
+    except AttributeError:  # non-linux
+        return os.cpu_count() or 1
+
+
+# module-level (not nested in the builder) so it crosses the subprocess
+# transport's pickle boundary by qualified name
+@stage(kind="data_engineering", name="spin")
+def spin_stage(ctx, seed: int, iters: int) -> float:
+    """GIL-bound stage body: a pure-Python accumulation loop that holds
+    the interpreter lock the whole time, so in-process threads cannot
+    overlap it but subprocess workers can."""
+    acc = float(seed)
+    for i in range(iters):
+        acc = (acc * 1.000001 + i % 7) % 1e9
+    return acc
+
+
+def _build_pipelines(n: int, iters: int):
+    return [StageGraph([spin_stage.bind(i, iters)]).compile(f"p{i}")
+            for i in range(n)]
+
+
+def _bench_rpc(quick: bool) -> Tuple[float, float, float]:
+    """(startup_s, subprocess round-trip ms, in-process round-trip ms)."""
+    from repro.core.exec import SubprocessTransport
+    from repro.core.transport import InProcessTransport
+
+    reps = 20 if quick else 100
+    t0 = time.time()
+    sub = SubprocessTransport(max_workers=1, worker_devices=1)
+    try:
+        sub.submit(_ping, 0).result(timeout=180)  # first result = pool ready
+        startup_s = time.time() - t0
+        t0 = time.time()
+        for i in range(reps):
+            assert sub.submit(_ping, i).result(timeout=60) == i
+        sub_ms = (time.time() - t0) / reps * 1e3
+    finally:
+        sub.shutdown()
+
+    inp = InProcessTransport(max_workers=1)
+    try:
+        inp.submit(_ping, 0).result(timeout=60)
+        t0 = time.time()
+        for i in range(reps):
+            assert inp.submit(_ping, i).result(timeout=60) == i
+        inp_ms = (time.time() - t0) / reps * 1e3
+    finally:
+        inp.shutdown()
+    return startup_s, sub_ms, inp_ms
+
+
+def _bench_overlap(n: int, iters: int, workers: int) -> dict:
+    """Same N GIL-bound pipelines through a Session on each transport."""
+    from repro.core import Session
+
+    out = {}
+    for label, kwargs in (
+            ("in_process", {"transport": "in-process"}),
+            ("subprocess", {"transport": "subprocess",
+                            "transport_options": {"max_workers": workers,
+                                                  "worker_devices": 1}})):
+        t0 = time.time()
+        with Session(max_workers_per_pilot=max(workers, 2),
+                     **kwargs) as session:
+            res = session.run_all(_build_pipelines(n, iters))
+        wall = time.time() - t0
+        meta = res["_meta"]
+        for name, per in meta["per_pipeline"].items():
+            assert per["error"] is None, (label, name, per["error"])
+        out[label] = {
+            "wall_s": round(wall, 4),
+            "overlap_factor": round(meta["overlap_factor"], 3),
+        }
+    return out
+
+
+def bench_transport(full: bool = False, quick: bool = False) -> List[Tuple]:
+    """Rows: pool startup, per-task RPC round-trip on each transport, and
+    the GIL-bound multi-pipeline walls.  Re-execs standalone with an
+    emulated pool when the calling process has a single device (overlap
+    needs >=2 lease slots)."""
+    if len(jax.devices()) < 2:
+        return _rows_from_subprocess(full, quick)
+
+    n = 2 if quick else 4
+    # default bodies are ~2s each so the comparison is structural: pool
+    # startup (~1s, amortised in real use) cannot mask the GIL effect
+    iters = 200_000 if quick else 20_000_000
+    workers = min(n, max(len(jax.devices()) // 2, 2))
+
+    startup_s, sub_ms, inp_ms = _bench_rpc(quick)
+    overlap = _bench_overlap(n, iters, workers)
+
+    from benchmarks.results_io import merge_record
+    merge_record(RESULTS_JSON, {
+        "cpu_cores": _cores(),
+        "startup_s": round(startup_s, 3),
+        "rpc_roundtrip_ms": {"subprocess": round(sub_ms, 3),
+                             "in_process": round(inp_ms, 3)},
+        "gil_bound_pipelines": {
+            "n_pipelines": n, "iters": iters, "workers": workers,
+            **overlap,
+        },
+        "quick": quick,
+    })
+    speedup = (overlap["in_process"]["wall_s"]
+               / max(overlap["subprocess"]["wall_s"], 1e-9))
+    return [
+        ("transport/pool_startup", startup_s * 1e6, "workers=1"),
+        ("transport/rpc_roundtrip_subprocess", sub_ms * 1e3,
+         f"in_process_ms={inp_ms:.3f}"),
+        ("transport/gil_pipelines_in_process",
+         overlap["in_process"]["wall_s"] * 1e6,
+         f"overlap_factor={overlap['in_process']['overlap_factor']}"),
+        ("transport/gil_pipelines_subprocess",
+         overlap["subprocess"]["wall_s"] * 1e6,
+         f"overlap_factor={overlap['subprocess']['overlap_factor']};"
+         f"speedup_vs_threads={speedup:.2f};cores={_cores()}"),
+    ]
+
+
+def _rows_from_subprocess(full: bool, quick: bool = False) -> List[Tuple]:
+    import subprocess
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    cmd = [sys.executable, "-m", "benchmarks.transport"]
+    if full:
+        cmd.append("--full")
+    if quick:
+        cmd.append("--quick")
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=1800,
+                       env=env, cwd=repo)
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"standalone transport bench failed:\n{r.stdout[-2000:]}\n"
+            f"{r.stderr[-2000:]}")
+    rows = []
+    for line in r.stdout.splitlines():
+        if line.startswith("transport/"):
+            name, us, derived = line.split(",", 2)
+            rows.append((name, float(us), derived))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: tiny bodies, 2 pipelines, 20 RPC reps")
+    args = ap.parse_args()
+    rows = bench_transport(full=args.full, quick=args.quick)
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+    by_name = {r[0]: r for r in rows}
+    wall_in = by_name["transport/gil_pipelines_in_process"][1]
+    wall_sub = by_name["transport/gil_pipelines_subprocess"][1]
+    if not args.quick and _cores() >= 2:
+        # structural margin: N GIL-bound bodies on threads serialise, so
+        # the worker pool must win by roughly min(cores, workers).  On a
+        # single-core box there is no parallelism for either side to win
+        # — the numbers are still recorded, just not asserted.
+        assert wall_sub < wall_in, (
+            f"subprocess pipelines ({wall_sub/1e6:.2f}s) did not beat "
+            f"GIL-bound threads ({wall_in/1e6:.2f}s) on {_cores()} cores")
+    print(f"transport OK (subprocess {wall_sub/1e6:.2f}s vs in-process "
+          f"{wall_in/1e6:.2f}s on GIL-bound pipelines)")

@@ -14,7 +14,8 @@ import time
 from pathlib import Path
 from typing import Dict, List
 
-from repro.analysis import excepts, jit_boundary, kernel_contracts, locks
+from repro.analysis import excepts, jit_boundary, kernel_contracts, locks, \
+    pickles
 from repro.analysis.findings import (
     Finding,
     diff_against_baseline,
@@ -28,6 +29,8 @@ SRC_ROOT = REPO_ROOT / "src" / "repro"
 # classes named in the lock-discipline contract live in these files
 LOCK_FILES = [
     SRC_ROOT / "core" / "agent.py",
+    SRC_ROOT / "core" / "exec" / "transport.py",
+    SRC_ROOT / "core" / "exec" / "worker.py",
     SRC_ROOT / "core" / "pipeline.py",
     SRC_ROOT / "core" / "pilot.py",
     SRC_ROOT / "core" / "session.py",
@@ -36,7 +39,7 @@ LOCK_FILES = [
     SRC_ROOT / "serve" / "router.py",
 ]
 
-ALL_PASSES = ("locks", "jit", "kernels", "excepts")
+ALL_PASSES = ("locks", "jit", "kernels", "excepts", "pickles")
 
 
 def _src_modules() -> Dict[str, Path]:
@@ -63,6 +66,8 @@ def run_passes(names) -> List[Finding]:
             got = kernel_contracts.run()
         elif name == "excepts":
             got = excepts.run(sorted(SRC_ROOT.rglob("*.py")), REPO_ROOT)
+        elif name == "pickles":
+            got = pickles.run(sorted(SRC_ROOT.rglob("*.py")), REPO_ROOT)
         else:
             raise SystemExit(f"unknown pass {name!r}; known: {ALL_PASSES}")
         dt = time.perf_counter() - t0

@@ -1,0 +1,156 @@
+"""Length-prefixed pickle framing for the worker RPC channel.
+
+Every message on the wire is ``4-byte big-endian length || pickle
+payload``.  Messages are plain dicts with a ``"type"`` key; the framing
+layer knows nothing about their meaning.
+
+Device arrays never cross the wire as device arrays: the pickler
+coerces any ``jax.Array`` leaf to numpy at serialisation time (the
+receiving process has its own XLA runtime and its own devices — a
+pickled device buffer from another process is at best a silent
+host-round-trip, at worst refers to donated storage).  Numpy arrays
+round-trip bitwise, which is what the KV-handoff path relies on.
+"""
+from __future__ import annotations
+
+import io
+import pickle
+import socket
+import struct
+import sys
+import threading
+import types
+from typing import Any, Optional
+
+_LEN = struct.Struct(">I")
+#: refuse absurd frames (corrupt length prefix) rather than allocating.
+MAX_FRAME = 1 << 31
+
+
+class ConnectionClosed(ConnectionError):
+    """Peer closed the socket (EOF mid-frame or between frames)."""
+
+
+class _WireDump(pickle.Pickler):
+    """Pickler that lowers jax.Array leaves to numpy.
+
+    Looks jax up through ``sys.modules`` so this module stays importable
+    (and usable for pure-python messages) without forcing a jax import.
+    """
+
+    def reducer_override(self, obj: Any):
+        if (isinstance(obj, types.FunctionType)
+                and obj.__module__ == "__main__"
+                and "<locals>" not in obj.__qualname__):
+            # A fn from a ``python -m pkg.mod`` entry module pickles by
+            # reference as ``__main__.name`` — which in the worker is the
+            # worker daemon, not the caller's script.  runpy records the
+            # real module name in __main__.__spec__; ship that instead.
+            real = main_module_name()
+            if real is not None:
+                return (import_fn, (real, obj.__qualname__))
+        jax = sys.modules.get("jax")
+        if jax is not None and isinstance(obj, jax.Array):
+            import numpy as np
+            host = np.asarray(obj)
+            return (_as_numpy, (host,))
+        return NotImplemented
+
+
+def _as_numpy(a):
+    return a
+
+
+def main_module_name() -> Optional[str]:
+    """The importable name behind ``__main__`` (``python -m pkg.mod``
+    runs), or None for plain-script / REPL mains that workers cannot
+    re-import."""
+    spec = getattr(sys.modules.get("__main__"), "__spec__", None)
+    return getattr(spec, "name", None)
+
+
+def import_fn(module: str, qualname: str):
+    """Worker-side loader for a ``__main__``-remapped function: walk the
+    qualname in the re-imported module, unwrapping a decorator object
+    (e.g. a StageSpec) that holds the raw fn under ``.fn``."""
+    import importlib
+    obj: Any = importlib.import_module(module)
+    for part in qualname.split("."):
+        obj = getattr(obj, part)
+    if not isinstance(obj, types.FunctionType):
+        inner = getattr(obj, "fn", None)
+        if isinstance(inner, types.FunctionType):
+            return inner
+    return obj
+
+
+def dumps(obj: Any) -> bytes:
+    """Pickle ``obj`` for the wire (jax.Array leaves become numpy)."""
+    buf = io.BytesIO()
+    _WireDump(buf, protocol=pickle.HIGHEST_PROTOCOL).dump(obj)
+    return buf.getvalue()
+
+
+def loads(data: bytes) -> Any:
+    return pickle.loads(data)
+
+
+class Channel:
+    """A framed, thread-safe-for-send message channel over a socket.
+
+    Sends may come from several threads (heartbeat + task runner on the
+    worker side; dispatcher + service bridges on the parent side), so
+    each frame is written under a lock.  Receives are single-threaded by
+    construction (one reader thread per channel) and unlocked.
+    """
+
+    def __init__(self, sock: socket.socket):
+        self._sock = sock
+        self._send_lock = threading.Lock()  # guards frame writes on _sock
+        self._recv_buf = b""
+
+    def fileno(self) -> int:
+        return self._sock.fileno()
+
+    def send(self, msg: Any) -> None:
+        payload = dumps(msg)
+        frame = _LEN.pack(len(payload)) + payload
+        with self._send_lock:
+            self._sock.sendall(frame)
+
+    def recv(self, timeout: Optional[float] = None) -> Any:
+        """Block for the next message; raise ConnectionClosed on EOF,
+        socket.timeout on ``timeout`` expiry.  A timeout mid-frame keeps
+        the partial bytes buffered, so the next recv resumes cleanly."""
+        self._sock.settimeout(timeout)
+        header = self._recv_exact(_LEN.size)
+        (n,) = _LEN.unpack(header)
+        if n > MAX_FRAME:
+            raise ConnectionClosed(f"corrupt frame length {n}")
+        try:
+            payload = self._recv_exact(_LEN.size + n)[_LEN.size:]
+        except socket.timeout:
+            raise
+        self._recv_buf = b""
+        return loads(payload)
+
+    def _recv_exact(self, n: int) -> bytes:
+        """Grow the resume buffer to ``n`` bytes total and return it."""
+        while len(self._recv_buf) < n:
+            try:
+                chunk = self._sock.recv(min(n - len(self._recv_buf), 1 << 20))
+            except socket.timeout:
+                raise
+            except OSError as e:
+                raise ConnectionClosed(str(e)) from e
+            if not chunk:
+                raise ConnectionClosed("peer closed the channel")
+            self._recv_buf += chunk
+        return self._recv_buf
+
+    def close(self) -> None:
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self._sock.close()

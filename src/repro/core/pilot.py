@@ -39,6 +39,11 @@ class PilotDescription:
     # work on a pilot whose kinds cover the work's kinds (e.g. a
     # CPU-worker pod that only takes "data_engineering" stages).
     task_kinds: Tuple[str, ...] = ()
+    # where this pilot's agent executes attempts: None = the Session
+    # default, "in-process" = thread pool in this process, "subprocess" =
+    # process-per-worker pool (repro.core.exec), "jax-distributed" = the
+    # multi-host flavour.  Resolved by Session._ensure.
+    transport: Optional[str] = None
 
 
 class Pilot:

@@ -67,6 +67,31 @@ class Stage:
     service: bool = False
 
 
+class _BoundStage:
+    """Picklable binding of a stage fn to its upstream results and static
+    args.  Replaces the old per-submit lambda: a module-level class
+    crosses the subprocess transport's pickle boundary whenever the
+    stage fn and upstream results do.  ``**kw`` forwards the agent's
+    ``resume_step`` on checkpointed stages (and ``control`` /
+    ``resume_state`` on service stages); plain stages never receive
+    extra kwargs."""
+
+    __slots__ = ("fn", "upstream", "args")
+
+    def __init__(self, fn, upstream, args):
+        self.fn = fn
+        self.upstream = upstream
+        self.args = tuple(args)
+
+    @property
+    def __name__(self) -> str:
+        return getattr(self.fn, "__name__", "stage")
+
+
+    def __call__(self, comm, **kw):
+        return self.fn(comm, self.upstream, *self.args, **kw)
+
+
 class Pipeline:
     """A small DAG of stages executed on one RemoteAgent.
 
@@ -350,18 +375,12 @@ class Pipeline:
                 self._mark_unplaceable(s)
                 continue
 
-            def wrap(fn, upstream, args):
-                # **kw forwards the agent's resume_step on checkpointed
-                # stages (and control/resume_state on service stages);
-                # plain stages never receive extra kwargs
-                return lambda comm, **kw: fn(comm, upstream, *args, **kw)
-
             with self._lock:
                 self.stage_agents[s.name] = agent
             tasks = agent.submit_async(
                 [TaskDescription(
                     name=f"{self.name}/{s.name}",
-                    fn=wrap(s.fn, upstream, s.args),
+                    fn=_BoundStage(s.fn, upstream, s.args),
                     kind=s.kind, num_devices=s.num_devices,
                     mesh_axes=s.mesh_axes, mesh_shape=s.mesh_shape,
                     priority=s.priority, max_retries=s.max_retries,

@@ -167,28 +167,106 @@ class StageSpec:
         return self.fn(ctx, *self.bound_args, *args,
                        **{**self.bound_kwargs, **kwargs})
 
+    # -- pickling ------------------------------------------------------------
+    # ``@stage`` rebinds the module attribute from the raw fn to this
+    # spec, so the fn can no longer pickle by reference (``module.name``
+    # resolves to the spec, not the function).  For the subprocess
+    # transport the fn travels as a _SpecFnRef instead and is recovered
+    # *through* the module-level spec on the worker side.
+
+    def __getstate__(self):
+        state = {f.name: getattr(self, f.name)
+                 for f in dataclasses.fields(self)}
+        fn = state["fn"]
+        mod = getattr(fn, "__module__", None)
+        qn = getattr(fn, "__qualname__", None)
+        if mod == "__main__":
+            # a ``python -m pkg.mod`` entry module: the worker's __main__
+            # is the worker daemon, so reference the importable name
+            from repro.core.exec.protocol import main_module_name
+            mod = main_module_name() or mod
+        if mod is not None and qn is not None and "<locals>" not in qn:
+            try:
+                owner = _resolve_qualname(mod, qn)
+            except (ImportError, AttributeError):
+                owner = None
+            # identity for same-module resolution; qualname match for the
+            # __main__ remap (the re-imported module re-decorates, so its
+            # spec wraps an equal-but-distinct function object)
+            if isinstance(owner, StageSpec) and (
+                    owner.fn is fn
+                    or getattr(owner.fn, "__qualname__", None) == qn):
+                state["fn"] = _SpecFnRef(mod, qn)
+        return state
+
+    def __setstate__(self, state):
+        fn = state.get("fn")
+        if isinstance(fn, _SpecFnRef):
+            state["fn"] = fn.resolve()
+        for k, v in state.items():
+            object.__setattr__(self, k, v)
+
     def to_stage(self) -> Stage:
         """Compile to the runtime :class:`Stage` — the adapter builds a
         :class:`StageContext` from the raw ``(comm, upstream, **kw)``
         contract, so the agent-side plumbing (checkpoint resume, service
         control) is untouched."""
-        spec = self
-
-        def runner(comm, upstream, **kw):
-            ctx = StageContext(
-                comm=comm, upstream=upstream,
-                resume_step=kw.pop("resume_step", None),
-                control=kw.pop("control", None),
-                resume_state=kw.pop("resume_state", None))
-            return spec.fn(ctx, *spec.bound_args, **spec.bound_kwargs)
-
-        runner.__name__ = f"stage:{self.name}"
+        runner = _StageRunner(self)
         return Stage(
             name=self.name, fn=runner, kind=self.kind,
             num_devices=self.num_devices, mesh_axes=self.mesh_axes,
             mesh_shape=self.mesh_shape, deps=self.deps,
             priority=self.priority, max_retries=self.max_retries,
             checkpoint_dir=self.checkpoint, service=self.service)
+
+
+def _resolve_qualname(module: str, qualname: str) -> Any:
+    import importlib
+    obj: Any = importlib.import_module(module)
+    for part in qualname.split("."):
+        obj = getattr(obj, part)
+    return obj
+
+
+class _SpecFnRef:
+    """Pickle stand-in for a ``@stage``-decorated function: resolves the
+    module attribute (the StageSpec) and returns its raw fn."""
+
+    __slots__ = ("module", "qualname")
+
+    def __init__(self, module: str, qualname: str):
+        self.module = module
+        self.qualname = qualname
+
+    def resolve(self) -> Callable:
+        obj = _resolve_qualname(self.module, self.qualname)
+        return obj.fn if isinstance(obj, StageSpec) else obj
+
+
+class _StageRunner:
+    """Picklable adapter from the raw ``(comm, upstream, **kw)`` stage
+    contract to :class:`StageContext`.  A module-level class instead of a
+    closure so DSL stages cross the subprocess transport's pickle
+    boundary whenever the decorated fn and its bound args do."""
+
+    __slots__ = ("spec",)
+
+    def __init__(self, spec: StageSpec):
+        self.spec = spec
+
+    @property
+    def __name__(self) -> str:
+        return f"stage:{self.spec.name}"
+
+
+    def __call__(self, comm, upstream, **kw):
+        ctx = StageContext(
+            comm=comm, upstream=upstream,
+            resume_step=kw.pop("resume_step", None),
+            control=kw.pop("control", None),
+            resume_state=kw.pop("resume_state", None))
+        return self.spec.fn(ctx, *self.spec.bound_args,
+                            **self.spec.bound_kwargs)
 
 
 def stage(fn: Optional[Callable] = None, *, name: Optional[str] = None,
@@ -405,7 +483,8 @@ class Session:
                  pods: Union[None, int, Sequence[PilotDescription]] = None,
                  placement: Optional[PlacementPolicy] = None,
                  max_workers_per_pilot: Optional[int] = None,
-                 transport=None):
+                 transport=None,
+                 transport_options: Optional[Dict] = None):
         if manager is not None and devices is not None:
             raise ValueError("pass manager= or devices=, not both")
         self.manager = manager if manager is not None \
@@ -413,7 +492,14 @@ class Session:
         self.placement = placement or KindAwarePlacement()
         self._pods_spec = pods
         self._max_workers = max_workers_per_pilot
+        # transport may be a Transport instance (shared, caller-owned) or
+        # a spec string ("in-process" / "subprocess" / "jax-distributed")
+        # resolved per pilot; PilotDescription(transport=...) overrides it
+        # per pod.  transport_options are kwargs for spec-built transports
+        # (e.g. worker_devices= for subprocess pools).
         self._transport = transport
+        self._transport_options = dict(transport_options or {})
+        self._owned_transports: List = []  # guarded-by: _lock
         self._lock = threading.Lock()
         self._pilots: List[Pilot] = []  # guarded-by: _lock
         self._owned_pilots: List[Pilot] = []  # guarded-by: _lock
@@ -445,22 +531,55 @@ class Session:
             if self._agents:
                 return
             adopted = list(self.manager.pilots)
+            desc_by_pilot: Dict[str, PilotDescription] = {}
             if adopted and self._pods_spec is None:
                 pilots, owned = adopted, []
             else:
                 descs = self._pod_descriptions()
                 pilots = self.manager.submit_pilots(descs)
                 owned = list(pilots)
+                desc_by_pilot = {p.uid: d for p, d in zip(pilots, descs)}
             agents = {}
             for p in pilots:
                 mw = self._max_workers if self._max_workers is not None \
                     else max(2, p.size)
-                agents[p.uid] = RemoteAgent(p, max_workers=mw,
-                                            transport=self._transport)
+                desc = desc_by_pilot.get(p.uid)
+                spec = desc.transport if desc is not None and \
+                    desc.transport is not None else self._transport
+                tr, session_owned = self._resolve_transport(spec, mw)
+                if session_owned:
+                    self._owned_transports.append(tr)
+                agents[p.uid] = RemoteAgent(p, max_workers=mw, transport=tr)
             self._pilots = list(pilots)
             self._owned_pilots = owned
             self._agents = agents
             self._assigned = {p.uid: 0 for p in pilots}
+
+    def _resolve_transport(self, spec, max_workers: int):
+        """Resolve a transport spec for one pilot's agent.  Returns
+        ``(transport_or_None, session_owned)``: spec strings build a
+        transport the session owns (and shuts down in close); a Transport
+        instance passes through caller-owned; None keeps the agent's
+        default in-process pool."""
+        if spec is None:
+            return None, False
+        if not isinstance(spec, str):
+            return spec, False  # a live Transport instance, caller-owned
+        if spec == "in-process":
+            return None, False  # the agent's own default thread pool
+        if spec in ("subprocess", "jax-distributed"):
+            from repro.core.exec import (JaxDistributedTransport,
+                                         SubprocessTransport)
+            opts = dict(self._transport_options)
+            # subprocess workers each carry a JAX runtime: default the
+            # pool small instead of one process per device slot
+            opts.setdefault("max_workers", min(max_workers, 2))
+            cls = (SubprocessTransport if spec == "subprocess"
+                   else JaxDistributedTransport)
+            return cls(**opts), True
+        raise ValueError(
+            f"unknown transport spec {spec!r}: expected 'in-process', "
+            "'subprocess', 'jax-distributed', or a Transport instance")
 
     def _pod_descriptions(self) -> List[PilotDescription]:
         pods = self._pods_spec
@@ -486,6 +605,7 @@ class Session:
             pipelines = list(self._pipelines)
             agents = list(self._agents.values())
             owned = list(self._owned_pilots)
+            owned_transports = list(self._owned_transports)
         for p in pipelines:
             for ctl in p.service_controls.values():
                 ctl.stop()
@@ -494,6 +614,11 @@ class Session:
                 a.close(timeout)
             except Exception as e:  # noqa: BLE001 — keep closing the rest
                 self.close_errors.append(f"agent {a.pilot.uid}: {e}")
+        for tr in owned_transports:
+            try:
+                tr.shutdown(wait=timeout is None or timeout > 0)
+            except Exception as e:  # noqa: BLE001 — keep closing the rest
+                self.close_errors.append(f"transport {tr.name}: {e}")
         for pilot in owned:
             try:
                 self.manager.cancel_pilot(pilot)

@@ -10,12 +10,17 @@ reports completion through the returned Future.
 
 ``InProcessTransport`` is the default (a thread pool in the agent's
 process — the right answer for a single-host jax device pool, where every
-worker shares one jax runtime).  The interface is deliberately shaped so
-a cross-node transport can slot in later: ``submit`` takes a callable and
-returns a ``concurrent.futures.Future``, and ``capacity`` bounds how many
-attempts the dispatcher keeps in flight.  A subprocess / jax-distributed
-transport must additionally require picklable task functions; that
-constraint lives here, not in the agent.
+worker shares one jax runtime).  ``submit`` takes a callable and returns
+a ``concurrent.futures.Future``, and ``capacity`` bounds how many
+attempts the dispatcher keeps in flight.
+
+The cross-process implementations live in :mod:`repro.core.exec`:
+``SubprocessTransport`` runs a pool of worker daemon processes (isolated
+JAX runtimes, heartbeat fault detection), and ``JaxDistributedTransport``
+is its multi-host flavour carrying ``jax.distributed.initialize``
+coordinates to the workers.  Both are re-exported here lazily; they
+additionally require picklable task functions (``remote = True``), a
+contract enforced at submit time with a clear ``TypeError``.
 """
 from __future__ import annotations
 
@@ -31,6 +36,11 @@ class Transport(abc.ABC):
     #: max attempts the transport can run concurrently (None = unbounded);
     #: the agent clamps its in-flight window to this.
     capacity: Optional[int] = None
+    #: True when submit crosses a process boundary.  The agent then ships
+    #: a picklable module-level task body (repro.core.exec.remote) instead
+    #: of its bound in-process worker, and enforces the picklable-task-fn
+    #: contract at enqueue time.
+    remote: bool = False
 
     @abc.abstractmethod
     def submit(self, fn: Callable, *args) -> Future:
@@ -62,32 +72,14 @@ class InProcessTransport(Transport):
         self._pool.shutdown(wait=wait)
 
 
-class JaxDistributedTransport(Transport):
-    """Placeholder for cross-node dispatch (one jax-distributed worker per
-    remote host).  Not implemented yet — the container image has no
-    multi-host fabric to run it against; the class exists so the shape of
-    the contract (picklable fns, per-worker jax.distributed.initialize)
-    is pinned down where it belongs."""
-
-    name = "jax-distributed"
-
-    def __init__(self, *a, **kw):
-        raise NotImplementedError(
-            "cross-node transport is not available in this build; use "
-            "InProcessTransport (see ROADMAP: cross-node dispatch)")
-
-    def submit(self, fn: Callable, *args) -> Future:  # pragma: no cover
-        raise NotImplementedError(
-            "JaxDistributedTransport.submit: cross-node dispatch needs a "
-            "picklable task fn shipped to a remote worker that has run "
-            "jax.distributed.initialize(coordinator, num_processes, "
-            "process_id) — the single-process thread-pool contract of "
-            "InProcessTransport does not transfer; see ROADMAP "
-            "'cross-node dispatch'")
-
-    def shutdown(self, wait: bool = True) -> None:  # pragma: no cover
-        raise NotImplementedError(
-            "JaxDistributedTransport.shutdown: would need to drain remote "
-            "workers and tear down the jax.distributed coordinator; no "
-            "multi-host fabric exists in this build (see ROADMAP "
-            "'cross-node dispatch')")
+def __getattr__(name: str):
+    # Lazy re-exports of the cross-process implementations: the exec
+    # package imports Transport from here, so a module-level import the
+    # other way would be a cycle.  ``from repro.core.transport import
+    # SubprocessTransport`` (and the retired stub's old import path for
+    # JaxDistributedTransport) keep working.
+    if name in ("SubprocessTransport", "JaxDistributedTransport",
+                "WorkerCrashed", "RemoteTaskError"):
+        from repro.core.exec import transport as _exec_transport
+        return getattr(_exec_transport, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -111,6 +111,20 @@ def run_fleet(args, cfg) -> dict:
     return res
 
 
+@stage(kind="inference", service=True, name="engine")
+def engine_service(ctx, arch: str = "tinyllama-1.1b", smoke: bool = True,
+                   max_slots: int = 4, max_len: int = 49, seed: int = 0):
+    """Module-level service body: builds the ServeEngine INSIDE the
+    executing process (the picklable-task contract for
+    ``transport="subprocess"`` — a closure over a parent-side engine
+    would capture unpicklable device buffers; see README
+    "Cross-process execution")."""
+    cfg = get_config(arch, smoke=smoke)
+    engine = ServeEngine(cfg, RunConfig(), max_slots=max_slots,
+                         max_len=max_len, seed=seed)
+    return engine.run_service(ctx.control, resume_state=ctx.resume_state)
+
+
 def run(args) -> dict:
     cfg = get_config(args.arch, smoke=args.smoke)
     if cfg.is_encoder_decoder or cfg.input_kind == "embeds":
@@ -121,19 +135,16 @@ def run(args) -> dict:
         return run_fleet(args, cfg)
     slots = args.slots or min(args.batch, 4)
     max_len = args.prompt_len + args.gen + 1
-    engine = ServeEngine(cfg, RunConfig(), max_slots=slots, max_len=max_len,
-                         seed=0)
-
-    @stage(kind="inference", service=True, name="engine")
-    def serve_stage(ctx):
-        return engine.run_service(ctx.control, resume_state=ctx.resume_state)
+    serve_stage = engine_service.bind(
+        arch=args.arch, smoke=args.smoke, max_slots=slots, max_len=max_len,
+        seed=0)
 
     # the Session's agents OWN their transports: close() drains the worker
     # pool, so the service lease is back before the pilot is recycled —
     # and close() runs on EVERY exit path (context manager), so a failed
     # serve task can no longer leak the pilot's devices
     with Session(pods=[PilotDescription(name="serve-pod")],
-                 max_workers_per_pilot=2) as session:
+                 max_workers_per_pilot=2, transport=args.transport) as session:
         handle = session.serve(serve_stage, name="serve")
 
         rng = np.random.default_rng(1)
@@ -200,6 +211,11 @@ def build_parser():
                          "joined by KV-page handoff")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress per-request streaming deltas")
+    ap.add_argument("--transport", default="in-process",
+                    choices=["in-process", "subprocess"],
+                    help="where the service stage executes: this process, "
+                         "or a worker daemon process with its own JAX "
+                         "runtime (repro.core.exec)")
     return ap
 
 

@@ -56,3 +56,23 @@ class KVHandoff:
     @property
     def rid(self) -> str:
         return self.request.rid
+
+    # -- wire serialization ---------------------------------------------------
+    # A handoff crosses process boundaries when the exporting and
+    # importing engines live in different workers (subprocess transport).
+    # Pickling lowers every page leaf to numpy: a device buffer from
+    # another process's XLA runtime is meaningless here, and numpy
+    # round-trips the page bytes bitwise — which the importer's
+    # block-table rewrite depends on (asserted in tests).
+
+    def __getstate__(self):
+        state = dict(self.__dict__)
+        state["pages"] = _tree_to_numpy(self.pages)
+        state["slot_key"] = np.asarray(self.slot_key)
+        return state
+
+
+def _tree_to_numpy(tree: Any) -> Any:
+    """Coerce every array leaf of a cache-shaped pytree to host numpy."""
+    import jax
+    return jax.tree_util.tree_map(np.asarray, tree)

@@ -67,6 +67,23 @@ class Request:
         if self.prompt.size == 0:
             raise ValueError("empty prompt")
 
+    # Requests cross process boundaries (subprocess transport: service
+    # inbox forwarding, engine checkpoints inside ServicePreempted state,
+    # KV handoffs).  threading.Event is not picklable, so it travels as
+    # its set-ness and is rebuilt on the far side.
+    def __getstate__(self):
+        state = dict(self.__dict__)
+        state["_finished"] = self._finished.is_set()
+        return state
+
+    def __setstate__(self, state):
+        was_set = state.pop("_finished", False)
+        self.__dict__.update(state)
+        ev = threading.Event()
+        if was_set:
+            ev.set()
+        self._finished = ev
+
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])

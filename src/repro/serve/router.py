@@ -43,6 +43,7 @@ owns — never the pool.
 from __future__ import annotations
 
 import collections
+import functools
 import threading
 import time
 from typing import Any, Deque, Dict, List, Optional, Sequence
@@ -61,6 +62,16 @@ from repro.serve.engine import ServeEngine
 from repro.serve.handoff import KVHandoff
 from repro.serve.request import Request, RequestState
 from repro.train.state import model_specs
+
+
+def _ship_wire(hand: KVHandoff) -> KVHandoff:
+    """Shipping body for remote transports: runs inside a worker process,
+    so the handoff's page blocks are serialized across the process
+    boundary on the way in and bitwise back out (KVHandoff.__getstate__
+    lowers page leaves to numpy).  Today's single-host stand-in for the
+    cross-node data plane; the router binds the round-tripped pages to
+    the client-held request parent-side."""
+    return hand
 
 
 class _Member:
@@ -376,7 +387,17 @@ class EngineRouter:
             if isinstance(entry, KVHandoff):
                 # the page blocks cross engines through the transport —
                 # the data plane a cross-node fabric will replace
-                self._transport.submit(self._deliver, entry, m)
+                if getattr(self._transport, "remote", False):
+                    # subprocess transport: the pages are pickled into a
+                    # worker process and back (a real process-boundary
+                    # crossing), then bound parent-side in on_done — a
+                    # bound method cannot cross the pickle boundary
+                    self._transport.submit(
+                        _ship_wire, entry,
+                        on_done=functools.partial(self._deliver_shipped,
+                                                  hand=entry, m=m))
+                else:
+                    self._transport.submit(self._deliver, entry, m)
                 routed += 1
                 continue
             try:
@@ -393,6 +414,24 @@ class EngineRouter:
                 # new arrivals landed behind these in wall-clock order
                 self.queue = collections.deque(kept + list(self.queue))
         return routed > 0
+
+    def _deliver_shipped(self, fut, hand: KVHandoff, m: _Member) -> None:
+        """Remote-transport delivery: bind the wire-round-tripped handoff
+        (whose page bytes crossed the process boundary) to the
+        client-held Request and deliver it.  A worker crash mid-ship
+        loses nothing — the original handoff is still parent-side and is
+        simply re-queued for another route."""
+        try:
+            shipped = fut.result()
+        except Exception:  # noqa: BLE001 — WorkerCrashed/RemoteTaskError
+            self._requeue([hand])
+            return
+        # the request replica that rode the wire is discarded: the
+        # client streams from the object it holds
+        shipped.request = hand.request
+        with self._cond:
+            self._stats["handoff_wire_roundtrips"] += 1
+        self._deliver(shipped, m)
 
     def _deliver(self, hand: KVHandoff, m: _Member) -> None:
         """Transport-side delivery of one migrated prefill."""

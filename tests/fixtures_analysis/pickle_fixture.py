@@ -1,0 +1,43 @@
+"""Seeded picklable-task-contract violations.
+
+``inner_stage`` (nested ``@stage``) and the ``fn=lambda`` TaskDescription
+must be flagged; ``top_stage`` (module level), ``pinned_stage`` (nested
+but carrying the ``noqa: PKL001`` in-process marker) and the marked
+lambda must not be.
+"""
+
+
+def stage(**kw):
+    def wrap(f):
+        return f
+    return wrap
+
+
+def TaskDescription(**kw):  # noqa: N802 — mirrors the real ctor name
+    return kw
+
+
+@stage(kind="generic")
+def top_stage(ctx):
+    return 1
+
+
+def build_pipeline():
+    captured = 2
+
+    @stage(kind="generic")
+    def inner_stage(ctx):  # SEEDED VIOLATION: nested @stage, closure
+        return captured
+
+    @stage(kind="generic")
+    def pinned_stage(ctx):  # noqa: PKL001 — fixture pins in-process
+        return captured
+
+    return inner_stage, pinned_stage
+
+
+def submit_tasks():
+    bad = TaskDescription(name="bad", fn=lambda comm: 1)  # SEEDED VIOLATION
+    ok = TaskDescription(name="ok",
+                         fn=lambda comm: 1)  # noqa: PKL001 — in-process only
+    return bad, ok

@@ -1,0 +1,44 @@
+"""Module-level task fns for tests/spawn/subprocess_transport.py.
+
+Spawn scripts run as plain ``__main__`` scripts (no importable module
+spec), so their task fns must live HERE: the script directory is
+``sys.path[0]`` in the parent and the transport propagates ``sys.path``
+into each worker's PYTHONPATH, so ``exec_tasks.<fn>`` resolves by
+qualified name inside the worker interpreter.
+"""
+import os
+import signal
+
+import numpy as np
+
+from repro.checkpoint import store
+from repro.core import stage
+
+
+def mesh_sum(comm, n):
+    """Runs on the worker's own carved communicator: proves each worker
+    owns an isolated device pool (parent devices never cross the wire)."""
+    import jax
+    import jax.numpy as jnp
+    x = jnp.ones((n,))
+    return {"total": float(jnp.sum(x)), "worker_devices": len(jax.devices()),
+            "comm_devices": comm.size, "pid": os.getpid()}
+
+
+def train_then_die(comm, ckpt_dir, resume_step=None):
+    if resume_step is None:
+        store.save(ckpt_dir, 7, {"w": np.zeros(2, np.float32)})
+        os.kill(os.getpid(), signal.SIGKILL)
+    return ("resumed", resume_step)
+
+
+@stage(kind="data_engineering", name="make")
+def make_stage(ctx):
+    return np.arange(32, dtype=np.float32)
+
+
+@stage(kind="train", name="reduce")
+def reduce_stage(ctx):
+    import jax.numpy as jnp
+    x = ctx.upstream["make"]
+    return float(jnp.sum(jnp.asarray(x) ** 2))

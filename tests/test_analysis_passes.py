@@ -8,7 +8,7 @@ from types import SimpleNamespace
 
 import pytest
 
-from repro.analysis import excepts, jit_boundary, locks
+from repro.analysis import excepts, jit_boundary, locks, pickles
 from repro.analysis.findings import (
     Finding, diff_against_baseline, load_baseline, write_baseline,
 )
@@ -89,6 +89,25 @@ def test_excepts_pass_respects_noqa_boundary():
     assert len(findings) == 1
     assert findings[0].rule == "broad-except"
     assert findings[0].line == 11  # risky() flagged, isolated() exempt
+
+
+# ---------------------------------------------------------------------------
+# picklable-task-contract pass
+# ---------------------------------------------------------------------------
+
+
+def test_pickles_pass_flags_nested_stage_and_lambda_task():
+    findings = pickles.run([FIXTURES / "pickle_fixture.py"], ROOT)
+    by_rule = {}
+    for f in findings:
+        by_rule.setdefault(f.rule, []).append(f)
+    # nested @stage flagged; module-level and PKL001-marked ones exempt
+    assert [f.symbol for f in by_rule.get("stage-nested", [])] == \
+        ["inner_stage"]
+    # fn=lambda flagged once; the PKL001-marked call site is exempt
+    assert len(by_rule.get("lambda-task", [])) == 1
+    assert by_rule["lambda-task"][0].symbol == "TaskDescription"
+    assert len(findings) == 2
 
 
 # ---------------------------------------------------------------------------

@@ -349,8 +349,14 @@ def test_dead_transport_fails_task_not_dispatcher():
 
 
 def test_cross_node_transport_is_explicitly_unavailable():
+    """Single-host JaxDistributedTransport is the subprocess pool; asking
+    for a real multi-host fabric (coordinator / num_processes > 1 /
+    process_id != 0) must raise the specific unavailability error BEFORE
+    any worker spawns."""
     with pytest.raises(NotImplementedError, match="cross-node"):
-        JaxDistributedTransport()
+        JaxDistributedTransport(coordinator="10.0.0.1:1234", num_processes=2)
+    with pytest.raises(NotImplementedError, match="cross-node"):
+        JaxDistributedTransport(num_processes=4, process_id=1)
 
 
 # ---------------------------------------------------------------------------

@@ -127,3 +127,10 @@ def test_distributed_extras(spawned):
     """pipeline parallelism + int8 gradient compression (subprocess)."""
     out = spawned("distributed_extras.py", devices=8)
     assert "ALL DISTRIBUTED EXTRAS PASS" in out
+
+
+def test_subprocess_transport_multiprocess_e2e(spawned):
+    """8-device parent driving subprocess workers: concurrent multi-device
+    tasks, SIGKILL + checkpoint retry, cross-pod pipeline, clean reap."""
+    out = spawned("subprocess_transport.py", devices=8)
+    assert "ALL SUBPROCESS TRANSPORT TESTS PASS" in out
