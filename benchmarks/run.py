@@ -13,10 +13,11 @@ def main() -> None:
     ap.add_argument("--which", default="all",
                     help="comma list: forecasting,hydrology,scaling,"
                          "multi_pipeline,concurrent,roofline,serving,"
-                         "decode_kernel,fleet,transport")
+                         "decode_kernel,fleet,transport,chaos")
     args = ap.parse_args()
     from benchmarks import paper_tables as P
     from benchmarks import roofline as R
+    from benchmarks.chaos import bench_chaos
     from benchmarks.concurrent_pipelines import bench_concurrent_pipelines
     from benchmarks.decode_kernel import bench_decode_kernel
     from benchmarks.fleet import bench_fleet
@@ -34,6 +35,7 @@ def main() -> None:
         "decode_kernel": bench_decode_kernel,    # beyond-paper: paged flash-decode
         "fleet": bench_fleet,                    # beyond-paper: multi-engine router
         "transport": bench_transport,            # beyond-paper: cross-process exec
+        "chaos": bench_chaos,                    # beyond-paper: fault injection
     }
     which = list(benches) if args.which == "all" else args.which.split(",")
     print("name,us_per_call,derived")

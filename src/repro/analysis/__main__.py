@@ -15,7 +15,7 @@ from pathlib import Path
 from typing import Dict, List
 
 from repro.analysis import excepts, jit_boundary, kernel_contracts, locks, \
-    pickles
+    pickles, timeouts
 from repro.analysis.findings import (
     Finding,
     diff_against_baseline,
@@ -39,7 +39,15 @@ LOCK_FILES = [
     SRC_ROOT / "serve" / "router.py",
 ]
 
-ALL_PASSES = ("locks", "jit", "kernels", "excepts", "pickles")
+# blocking-call timeout discipline applies to the runtime files (the
+# lock-discipline set plus the wire/persistence layers)
+TIMEOUT_FILES = LOCK_FILES + [
+    SRC_ROOT / "core" / "exec" / "protocol.py",
+    SRC_ROOT / "core" / "transport.py",
+    SRC_ROOT / "checkpoint" / "store.py",
+]
+
+ALL_PASSES = ("locks", "jit", "kernels", "excepts", "pickles", "timeouts")
 
 
 def _src_modules() -> Dict[str, Path]:
@@ -68,6 +76,9 @@ def run_passes(names) -> List[Finding]:
             got = excepts.run(sorted(SRC_ROOT.rglob("*.py")), REPO_ROOT)
         elif name == "pickles":
             got = pickles.run(sorted(SRC_ROOT.rglob("*.py")), REPO_ROOT)
+        elif name == "timeouts":
+            got = timeouts.run([p for p in TIMEOUT_FILES if p.exists()],
+                               REPO_ROOT)
         else:
             raise SystemExit(f"unknown pass {name!r}; known: {ALL_PASSES}")
         dt = time.perf_counter() - t0

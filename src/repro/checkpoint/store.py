@@ -7,6 +7,14 @@ let a restore reshard leaf-by-leaf onto a new mesh — the moral equivalent
 of an OCDBT/array-store layout at container scale.  ``AsyncCheckpointer``
 snapshots device arrays to host, then writes on a background thread so
 the train loop never blocks on disk.
+
+Crash consistency: the manifest carries a crc32 + byte count per leaf,
+every file (and the step directory) is fsynced before the atomic rename,
+and readers verify.  A step torn by a crash mid-write — truncated leaf,
+half-written manifest, bytes that never hit the platter — is *skipped
+with a warning* by ``latest_step()``/``restore()``, which fall back to
+the newest intact step instead of raising out of the very retry path
+checkpoints exist to serve.  ``verify_step`` is the explicit probe.
 """
 from __future__ import annotations
 
@@ -15,10 +23,22 @@ import os
 import queue
 import re
 import threading
+import warnings
 from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
+
+
+def _fault_injector():
+    # lazy lookup, not an import: repro.core.resilience pulls in the
+    # session facade (which imports this module back), and a store that
+    # never runs under chaos shouldn't pay for it.  If nobody imported
+    # the faults module, nobody armed an injector.
+    import sys
+
+    mod = sys.modules.get("repro.core.resilience.faults")
+    return mod.active() if mod is not None else None
 
 try:
     import zstandard
@@ -64,13 +84,63 @@ def _path_str(p) -> str:
     return str(p)
 
 
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint step failed verification (torn write / bit rot)."""
+
+
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    # directory fsync makes the rename itself durable; best-effort on
+    # filesystems that refuse O_RDONLY dir fds
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def _tear(path: str, manifest: dict, at_byte: int, leaf: int) -> None:
+    """Simulate a crash that left ``path`` torn: truncate one file.
+
+    ``leaf < 0`` tears the manifest itself; otherwise the ``leaf``-th
+    leaf file (manifest order) is cut at ``at_byte``.
+    """
+    if leaf < 0:
+        victim = os.path.join(path, "manifest.json")
+    else:
+        files = [m["file"] for m in manifest["leaves"].values()]
+        victim = os.path.join(path, files[leaf % len(files)])
+    size = os.path.getsize(victim)
+    with open(victim, "r+b") as f:
+        f.truncate(min(max(0, at_byte), max(0, size - 1)))
+
+
 def save(directory: str, step: int, state: PyTree) -> str:
-    """Synchronous save. Returns the checkpoint path."""
+    """Synchronous save. Returns the checkpoint path.
+
+    Durability order: leaf files + manifest are written and fsynced
+    inside ``step_N.tmp``, the tmp dir is fsynced, then the atomic
+    rename publishes the step and the parent dir is fsynced.  A crash
+    at any point leaves either no ``step_N`` or a fully-synced one —
+    and if the platter still lies, the per-leaf crc32s catch it on read.
+    """
     path = os.path.join(directory, f"step_{step:08d}")
     tmp = path + ".tmp"
     os.makedirs(tmp, exist_ok=True)
     flat = _flatten(state)
-    manifest = {"step": step, "leaves": {}}
+    manifest = {"step": step, "format": 2, "leaves": {}}
     for key, leaf in flat.items():
         arr = np.asarray(jax.device_get(leaf))
         codec, payload = _compress(arr.tobytes(order="C"))
@@ -78,66 +148,163 @@ def save(directory: str, step: int, state: PyTree) -> str:
             ".npy.zst" if codec == "zstd" else ".npy.zz")
         manifest["leaves"][key] = {
             "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
-            "codec": codec,
+            "codec": codec, "bytes": len(payload),
+            "crc32": _zlib_crc32(payload),
         }
-        with open(os.path.join(tmp, fn), "wb") as f:
+        fpath = os.path.join(tmp, fn)
+        with open(fpath, "wb") as f:
             f.write(payload)
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        _fsync_file(fpath)
+    mpath = os.path.join(tmp, "manifest.json")
+    with open(mpath, "w") as f:
         json.dump(manifest, f)
+    _fsync_file(mpath)
+    _fsync_dir(tmp)
     if os.path.exists(path):
         import shutil
 
         shutil.rmtree(path)
     os.rename(tmp, path)
+    _fsync_dir(directory)
+    inj = _fault_injector()
+    if inj is not None:
+        act = inj.fire("checkpoint.save", step=step)
+        if act is not None and act["action"] == "tear":
+            _tear(path, manifest, int(act.get("at_byte", 0)),
+                  int(act.get("leaf", 0)))
     return path
 
 
-def latest_step(directory: str) -> Optional[int]:
+def _zlib_crc32(payload: bytes) -> int:
+    return zlib.crc32(payload) & 0xFFFFFFFF
+
+
+def verify_step(directory: str, step: int) -> bool:
+    """True iff ``step`` is structurally intact on disk.
+
+    Checks: readable manifest, every leaf file present, and — for
+    format-2 manifests — byte count and crc32 of each leaf's on-disk
+    payload.  Pre-format-2 steps get the structural check only.
+    """
+    path = os.path.join(directory, f"step_{step:08d}")
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        for meta in manifest["leaves"].values():
+            fpath = os.path.join(path, meta["file"])
+            if "bytes" in meta and os.path.getsize(fpath) != meta["bytes"]:
+                return False
+            if "crc32" in meta:
+                with open(fpath, "rb") as f:
+                    if _zlib_crc32(f.read()) != meta["crc32"]:
+                        return False
+            elif not os.path.exists(fpath):
+                return False
+    except (OSError, ValueError, KeyError):
+        return False
+    return True
+
+
+def _steps_on_disk(directory: str):
     if not os.path.isdir(directory):
-        return None
-    steps = [
-        int(m.group(1))
-        for m in (re.match(r"step_(\d+)$", d) for d in os.listdir(directory))
-        if m
-    ]
-    return max(steps) if steps else None
+        return []
+    return sorted(
+        (int(m.group(1))
+         for m in (re.match(r"step_(\d+)$", d) for d in os.listdir(directory))
+         if m),
+        reverse=True,
+    )
+
+
+def latest_step(directory: str, *, verify: bool = True) -> Optional[int]:
+    """Newest step — by default the newest *intact* step.
+
+    A torn/corrupt step is skipped with a warning rather than returned:
+    callers feed this straight into retry resume logic, and resuming
+    from a poisoned step would crash the retry it exists to serve.
+    """
+    for step in _steps_on_disk(directory):
+        if not verify or verify_step(directory, step):
+            return step
+        warnings.warn(
+            f"checkpoint step {step} under {directory} is torn/corrupt; "
+            f"falling back to an older step", RuntimeWarning, stacklevel=2)
+    return None
+
+
+def _read_step(path: str, manifest: dict, flat_like: Dict[str, Any],
+               flat_shard: Dict[str, Any]) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for key, meta in manifest["leaves"].items():
+        if key not in flat_like:
+            continue
+        with open(os.path.join(path, meta["file"]), "rb") as f:
+            payload = f.read()
+        if "crc32" in meta and _zlib_crc32(payload) != meta["crc32"]:
+            raise CheckpointCorrupt(
+                f"crc mismatch for leaf {key!r} in {path}")
+        try:
+            buf = _decompress(meta.get("codec", "zstd"), payload)
+            arr = np.frombuffer(buf, dtype=np.dtype(meta["dtype"])) \
+                .reshape(meta["shape"]).copy()
+        except Exception as e:  # noqa: BLE001 - any decode error = torn leaf
+            raise CheckpointCorrupt(
+                f"torn leaf {key!r} in {path}: {e}") from e
+        if key in flat_shard and flat_shard[key] is not None:
+            out[key] = jax.device_put(arr, flat_shard[key])
+        else:
+            out[key] = jax.device_put(arr)
+    return out
 
 
 def restore(directory: str, like: PyTree, *, step: Optional[int] = None,
             shardings: Optional[PyTree] = None) -> PyTree:
     """Restore into the structure of ``like``.  ``shardings`` (same
     structure) re-places each leaf — pass shardings derived from a
-    *different* mesh to do an elastic restart."""
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints under {directory}")
-    path = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    *different* mesh to do an elastic restart.
+
+    With ``step=None`` a torn/corrupt newest step is skipped (with a
+    warning) in favour of the newest intact one; an explicitly
+    requested step raises :class:`CheckpointCorrupt` instead.
+    """
+    candidates = [step] if step is not None else _steps_on_disk(directory)
+    if not candidates:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
     flat_like = _flatten(like)
     flat_shard = _flatten(shardings) if shardings is not None else {}
-    out: Dict[str, Any] = {}
-    for key, meta in manifest["leaves"].items():
-        if key not in flat_like:
+    last_err: Optional[Exception] = None
+    for cand in candidates:
+        path = os.path.join(directory, f"step_{cand:08d}")
+        try:
+            try:
+                with open(os.path.join(path, "manifest.json")) as f:
+                    manifest = json.load(f)
+            except (OSError, ValueError) as e:
+                raise CheckpointCorrupt(
+                    f"unreadable manifest in {path}: {e}") from e
+            out = _read_step(path, manifest, flat_like, flat_shard)
+        except CheckpointCorrupt as e:
+            if step is not None:
+                raise
+            warnings.warn(
+                f"skipping torn/corrupt checkpoint step {cand}: {e}",
+                RuntimeWarning, stacklevel=2)
+            last_err = e
             continue
-        with open(os.path.join(path, meta["file"]), "rb") as f:
-            buf = _decompress(meta.get("codec", "zstd"), f.read())
-        arr = np.frombuffer(buf, dtype=np.dtype(meta["dtype"])).reshape(meta["shape"]).copy()
-        if key in flat_shard and flat_shard[key] is not None:
-            out[key] = jax.device_put(arr, flat_shard[key])
-        else:
-            out[key] = jax.device_put(arr)
-    missing = set(flat_like) - set(out)
-    if missing:
-        raise KeyError(f"checkpoint missing leaves: {sorted(missing)[:5]} ...")
-    # unflatten back into `like`'s treedef
-    leaves_in_order = []
-    for path_, _ in jax.tree_util.tree_flatten_with_path(like)[0]:
-        key = _SEP.join(_path_str(p) for p in path_)
-        leaves_in_order.append(out[key])
-    treedef = jax.tree_util.tree_structure(like)
-    return jax.tree_util.tree_unflatten(treedef, leaves_in_order)
+        missing = set(flat_like) - set(out)
+        if missing:
+            raise KeyError(
+                f"checkpoint missing leaves: {sorted(missing)[:5]} ...")
+        # unflatten back into `like`'s treedef
+        leaves_in_order = []
+        for path_, _ in jax.tree_util.tree_flatten_with_path(like)[0]:
+            key = _SEP.join(_path_str(p) for p in path_)
+            leaves_in_order.append(out[key])
+        treedef = jax.tree_util.tree_structure(like)
+        return jax.tree_util.tree_unflatten(treedef, leaves_in_order)
+    raise CheckpointCorrupt(
+        f"every checkpoint step under {directory} is torn/corrupt "
+        f"(last error: {last_err})")
 
 
 class AsyncCheckpointer:

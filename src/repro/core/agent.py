@@ -20,7 +20,13 @@ Runnability features the brief requires at scale:
 * **fault isolation + retry** — a task exception (including simulated
   ``DeviceFailure``) is contained in its Task; failed devices are removed
   from the pilot pool and the task retries on a re-carved (possibly
-  smaller) mesh — elastic degradation;
+  smaller) mesh — elastic degradation.  With a
+  :class:`repro.core.resilience.FailurePolicy` on the description the
+  retry loop gains exponential backoff with deterministic jitter
+  (retries park on ``Task.not_before``), a per-attempt timeout enforced
+  by remote transports, and an end-to-end deadline across all attempts
+  — a task that runs out of deadline fails *cleanly*: devices released,
+  quotas balanced, callbacks fired;
 * **straggler mitigation** — speculative duplicate execution when a task
   runs past ``straggler_factor x`` the median duration of its tag class;
   first completion wins, and the speculative lease is released under its
@@ -268,6 +274,11 @@ class RemoteAgent:
                 raise RuntimeError("RemoteAgent is closed")
             for t in tasks:
                 self._order.setdefault(t.uid, next(self._seq))
+                pol = t.description.policy
+                if pol is not None and t.deadline is None:
+                    # end-to-end deadline: one clock across all attempts,
+                    # anchored at submission
+                    t.deadline = pol.deadline_at(t.submitted_at)
             self._pending.extend(tasks)
             self._pending.sort(
                 key=lambda t: (-t.description.priority, self._order[t.uid]))
@@ -289,12 +300,22 @@ class RemoteAgent:
                 self._cond.wait(self._wait_timeout_locked())
 
     def _wait_timeout_locked(self) -> Optional[float]:
+        timeout: Optional[float] = None
         for task in self._running.values():
             d = task.description
             if (d.speculative and task.uid not in self._spec
                     and len(self._durations.get(d.kind, [])) >= 3):
-                return self.straggler_check_s
-        return None
+                timeout = self.straggler_check_s
+                break
+        # a parked retry (backoff) or a pending deadline needs a timed
+        # wake: nothing else is guaranteed to notify the condition then
+        now = time.time()
+        for t in self._pending:
+            for at in (t.not_before, t.deadline):
+                if at is not None and at > now:
+                    w = (at - now) + 0.005
+                    timeout = w if timeout is None else min(timeout, w)
+        return timeout
 
     def _quota_headroom_locked(self, group: Optional[str]) -> Optional[int]:
         """Devices the group may still take (None = unconstrained)."""
@@ -337,8 +358,25 @@ class RemoteAgent:
         still: List[Task] = []
         starved: List[Task] = []  # blocked on capacity (not quota) — these
         # can justify preempting a lower-priority service task
+        expired: List[Task] = []  # end-to-end deadline hit before launch
+        now = time.time()
         for t in self._pending:
             d = t.description
+            if t.deadline is not None and now >= t.deadline:
+                # clean failure, not a crash: the task never launched,
+                # so no lease/quota state exists to unwind
+                t.finished_at = now
+                t.error = ((t.error + "; ") if t.error else "") + (
+                    f"end-to-end deadline exceeded after {t.attempts} "
+                    f"attempt(s) (FailurePolicy.deadline_s="
+                    f"{d.policy.deadline_s if d.policy else None})")
+                t.state = TaskState.FAILED
+                t.finalized = True
+                expired.append(t)
+                continue
+            if t.not_before > now:
+                still.append(t)  # parked by retry backoff
+                continue
             if d.service and any(
                     s.description.priority > d.priority for s in starved):
                 # a (possibly just-preempted) service must not re-grab
@@ -376,6 +414,11 @@ class RemoteAgent:
             if not self._submit_attempt_locked(t, devices, t.uid, d.group):
                 self._running.pop(t.uid, None)
         self._pending = still
+        if expired:
+            # callbacks fire outside the condition, like _fail_if_pool_dead
+            threading.Thread(
+                target=lambda: [self._finalize(t) for t in expired],
+                daemon=True).start()
         self._maybe_preempt_locked(starved)
         self._check_stragglers_locked()
 
@@ -477,13 +520,19 @@ class RemoteAgent:
             kwargs["resume_step"] = d.resume_step
         if d.service:
             kwargs["resume_state"] = d.resume_state
+        # a service attempt runs until told to stop — per-attempt
+        # deadlines only apply to bounded task bodies
+        attempt_timeout = None if d.service else (
+            d.policy.attempt_timeout_s if d.policy is not None
+            else d.timeout_s)
         return self._transport.submit(
             run_task_body, d.fn, tuple(d.args), kwargs,
             len(devices), d.mesh_shape, d.mesh_axes,
             service_control=d.control if d.service else None,
             on_done=lambda fut, t=task, lu=lease_uid:
                 self._on_remote_exit(t, lu, fut),
-            label=f"{task.uid} ({d.name})")
+            label=f"{task.uid} ({d.name})",
+            attempt_timeout_s=attempt_timeout)
 
     def _on_remote_exit(self, task: Task, lease_uid: str, fut) -> None:
         """Remote mirror of ``_run_one``'s state transitions, fired on a
@@ -496,7 +545,7 @@ class RemoteAgent:
         execution the fault-detection unit is the worker process."""
         d = task.description
         try:
-            out = fut.result()
+            out = fut.result()  # noqa: TMO001 — done-callback: result is ready
             result = out["result"] if isinstance(out, dict) else out
             overhead = out.get("overhead", {}) if isinstance(out, dict) else {}
             finished = time.time()
@@ -635,16 +684,36 @@ class RemoteAgent:
                         self._durations.setdefault(
                             task.description.kind, []).append(task.duration_s)
                 elif task.state == TaskState.FAILED and not in_flight:
-                    if (not self._closed
-                            and task.attempts <= task.description.max_retries
+                    pol = task.description.policy
+                    now = time.time()
+                    budget_ok = (pol.allow_retry(task.attempts)
+                                 if pol is not None
+                                 else task.attempts
+                                 <= task.description.max_retries)
+                    deadline_ok = task.deadline is None or now < task.deadline
+                    if (not self._closed and budget_ok and deadline_ok
                             and self.pilot.alive_devices()):
                         # checkpoint-aware retry: description.resume_step
-                        # was already refreshed off-lock in _run_one
+                        # was already refreshed off-lock in _run_one.
+                        # Under a FailurePolicy the retry is parked until
+                        # its backoff elapses (deterministic jitter).
+                        if pol is not None:
+                            delay = pol.backoff_s(task.attempts,
+                                                  key=task.uid)
+                            if delay > 0:
+                                task.not_before = now + delay
+                                task.overhead_s["backoff"] = \
+                                    task.overhead_s.get("backoff", 0.0) \
+                                    + delay
                         task.state = TaskState.PENDING
                         self._pending.append(task)
                         self._pending.sort(key=lambda t: (
                             -t.description.priority, self._order[t.uid]))
                     else:
+                        if not deadline_ok:
+                            task.error = ((task.error + "; ")
+                                          if task.error else "") + \
+                                "end-to-end deadline exceeded (FailurePolicy)"
                         task.finalized = True
                         to_finalize = True
                 elif task.state == TaskState.PREEMPTED and not in_flight:

@@ -104,6 +104,12 @@ class Channel:
     construction (one reader thread per channel) and unlocked.
     """
 
+    #: optional chaos hook (repro.core.resilience.faults): called with
+    #: each decoded inbound message; may return ``{"action": "drop"}``
+    #: to swallow the frame or ``{"action": "delay", "for_s": T}`` to
+    #: hold it — simulating a lost / late RPC reply on a live socket.
+    fault_filter = None
+
     def __init__(self, sock: socket.socket):
         self._sock = sock
         self._send_lock = threading.Lock()  # guards frame writes on _sock
@@ -122,17 +128,28 @@ class Channel:
         """Block for the next message; raise ConnectionClosed on EOF,
         socket.timeout on ``timeout`` expiry.  A timeout mid-frame keeps
         the partial bytes buffered, so the next recv resumes cleanly."""
-        self._sock.settimeout(timeout)
-        header = self._recv_exact(_LEN.size)
-        (n,) = _LEN.unpack(header)
-        if n > MAX_FRAME:
-            raise ConnectionClosed(f"corrupt frame length {n}")
-        try:
-            payload = self._recv_exact(_LEN.size + n)[_LEN.size:]
-        except socket.timeout:
-            raise
-        self._recv_buf = b""
-        return loads(payload)
+        while True:
+            self._sock.settimeout(timeout)
+            header = self._recv_exact(_LEN.size)
+            (n,) = _LEN.unpack(header)
+            if n > MAX_FRAME:
+                raise ConnectionClosed(f"corrupt frame length {n}")
+            try:
+                payload = self._recv_exact(_LEN.size + n)[_LEN.size:]
+            except socket.timeout:
+                raise
+            self._recv_buf = b""
+            msg = loads(payload)
+            ff = self.fault_filter
+            if ff is not None:
+                act = ff(msg)
+                if act is not None:
+                    if act.get("action") == "drop":
+                        continue  # the frame never "arrived"
+                    if act.get("action") == "delay":
+                        import time as _time
+                        _time.sleep(float(act.get("for_s", 0.0)))
+            return msg
 
     def _recv_exact(self, n: int) -> bytes:
         """Grow the resume buffer to ``n`` bytes total and return it."""

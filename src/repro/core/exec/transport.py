@@ -20,11 +20,26 @@ Fault model — a Future returned by ``submit`` always resolves:
 - worker hangs without dying → missed heartbeats trip the
   ``heartbeat_timeout_s`` backstop, same ``WorkerCrashed``.
 
-Crashed workers are respawned (bounded by ``max_respawns``) so the
-agent's checkpoint-aware retry finds a live pool.  ``shutdown`` reaps
-every worker process either way: ``wait=True`` drains in-flight work
-first; ``wait=False`` terminates immediately and fails outstanding
-Futures.
+Crashed workers are respawned so the agent's checkpoint-aware retry
+finds a live pool — under the transport's :class:`FailurePolicy`:
+consecutive crashes of the same worker slot back off exponentially
+(deterministic jitter), so a crash-looping worker no longer burns the
+lifetime ``max_respawns`` cap in seconds, and every respawn (attempt,
+streak, delay) is visible in ``stats()``.  The policy's
+``attempt_timeout_s`` (or a per-submit override) is enforced by the
+monitor: a busy worker whose attempt outlives its deadline is treated
+as hung — which is also what rescues a dropped RPC reply.  ``shutdown``
+reaps every worker process either way: ``wait=True`` drains in-flight
+work first; ``wait=False`` terminates immediately and fails
+outstanding Futures.
+
+Chaos hooks: when a :mod:`repro.core.resilience.faults` injector is
+armed, the dispatch path consults the ``transport.dispatch`` site after
+handing a worker its task (actions ``crash_worker`` / ``stall_heartbeat``
+become ``die`` / ``stall`` frames the worker honours), and each worker
+channel consults ``protocol.recv`` per inbound frame (``drop`` /
+``delay`` of result replies) — every fault mode above is reproducible
+from a seed, with detection and recovery exercising the real paths.
 
 Service tasks: ``submit(..., service_control=ctrl)`` bridges the
 caller-held :class:`~repro.core.task.ServiceControl` to a replica in the
@@ -46,6 +61,8 @@ from concurrent.futures import Future
 from typing import Any, Callable, Deque, Dict, List, Optional
 
 from repro.core.exec import pickling, protocol
+from repro.core.resilience import faults as rfaults
+from repro.core.resilience.policy import FailurePolicy
 from repro.core.task import ServicePreempted
 from repro.core.transport import Transport
 
@@ -78,10 +95,11 @@ class RemoteTaskError(RuntimeError):
 
 class _Job:
     __slots__ = ("jid", "payload", "future", "label", "service_control",
-                 "on_done", "worker_id")
+                 "on_done", "worker_id", "attempt_timeout_s", "deadline")
 
     def __init__(self, jid: int, payload: bytes, label: str,
-                 service_control, on_done):
+                 service_control, on_done,
+                 attempt_timeout_s: Optional[float] = None):
         self.jid = jid
         self.payload = payload
         self.label = label
@@ -89,6 +107,8 @@ class _Job:
         self.on_done = on_done
         self.future: Future = Future()
         self.worker_id: Optional[int] = None
+        self.attempt_timeout_s = attempt_timeout_s
+        self.deadline: Optional[float] = None  # set at dispatch
 
 
 class _WorkerHandle:
@@ -124,6 +144,7 @@ class SubprocessTransport(Transport):
                  start_timeout_s: float = 120.0,
                  drain_timeout_s: float = 120.0,
                  max_respawns: int = 16,
+                 policy: Optional[FailurePolicy] = None,
                  env: Optional[Dict[str, str]] = None):
         import socket as _socket
         self.capacity = max_workers
@@ -134,6 +155,12 @@ class SubprocessTransport(Transport):
         self._start_timeout_s = start_timeout_s
         self._drain_timeout_s = drain_timeout_s
         self._env = env
+        # respawn backoff + attempt deadlines; the default keeps the first
+        # respawn near-immediate but makes a crash-looping slot back off
+        # exponentially instead of burning the lifetime cap in seconds
+        self._policy = policy if policy is not None else FailurePolicy(
+            backoff_base_s=0.1, backoff_factor=2.0, backoff_max_s=5.0,
+            jitter=0.1)
         # multi-host hook (set by JaxDistributedTransport)
         self._jax_coordinator: Optional[str] = None
         self._jax_num_processes: Optional[int] = None
@@ -145,6 +172,9 @@ class SubprocessTransport(Transport):
         self._inflight: Dict[int, _Job] = {}  # guarded-by: _cond (jid -> job)
         self._closed = False  # guarded-by: _cond
         self._respawns = 0  # guarded-by: _cond
+        self._crash_streak: Dict[int, int] = {}  # guarded-by: _cond
+        self._respawn_due: Dict[int, float] = {}  # guarded-by: _cond
+        self._respawn_log: List[Dict[str, Any]] = []  # guarded-by: _cond
         self._jid = itertools.count()
 
         self._stream_lock = threading.Lock()
@@ -179,6 +209,7 @@ class SubprocessTransport(Transport):
                service_control=None,
                on_done: Optional[Callable[[Future], None]] = None,
                label: Optional[str] = None,
+               attempt_timeout_s: Optional[float] = None,
                **kwargs) -> Future:
         """Ship ``fn(*args, **kwargs)`` to an idle worker.
 
@@ -188,13 +219,19 @@ class SubprocessTransport(Transport):
         returned Future.  ``on_done`` fires exactly once on a transport
         thread after the Future resolves — never on the submitter's
         thread, so callers may hold scheduling locks while submitting.
+        ``attempt_timeout_s`` (default: the transport policy's) bounds
+        how long this attempt may run once dispatched before the monitor
+        declares the worker hung and fails the Future.
         """
         pickling.ensure_picklable(fn, args, kwargs, transport=self.name)
         payload = pickling.format_payload(
             fn, args, kwargs, service=service_control is not None)
+        if attempt_timeout_s is None:
+            attempt_timeout_s = self._policy.attempt_timeout_s
         job = _Job(next(self._jid), payload,
                    label or getattr(fn, "__qualname__", repr(fn)),
-                   service_control, on_done)
+                   service_control, on_done,
+                   attempt_timeout_s=attempt_timeout_s)
         with self._cond:
             if self._closed:
                 raise RuntimeError("SubprocessTransport is shut down")
@@ -255,6 +292,25 @@ class SubprocessTransport(Transport):
             return [w.proc.pid for w in self._workers.values()
                     if w.state != "dead" and w.proc.poll() is None]
 
+    def stats(self) -> Dict[str, Any]:
+        """One-lock snapshot of pool health and the respawn history."""
+        with self._cond:
+            states = collections.Counter(
+                w.state for w in self._workers.values())
+            now = time.time()
+            return {
+                "respawns": self._respawns,
+                "respawn_log": [dict(r) for r in self._respawn_log],
+                "respawn_pending": {
+                    wid: max(0.0, due - now)
+                    for wid, due in self._respawn_due.items()},
+                "crash_streaks": {w: s for w, s in
+                                  self._crash_streak.items() if s},
+                "queued": len(self._queue),
+                "inflight": len(self._inflight),
+                "workers": dict(states),
+            }
+
     # -- spawning / reaping ----------------------------------------------------
 
     def _spawn_locked(self, wid: int) -> _WorkerHandle:
@@ -284,7 +340,7 @@ class SubprocessTransport(Transport):
                 w.proc.wait(timeout=max(0.0, deadline - time.time()))
             except subprocess.TimeoutExpired:
                 w.proc.kill()
-                w.proc.wait()
+                w.proc.wait()  # noqa: TMO001 — SIGKILL'd: reap cannot hang
             if w.chan is not None:
                 w.chan.close()
 
@@ -316,6 +372,7 @@ class SubprocessTransport(Transport):
                     stale = True  # a replaced worker's late connection
                 else:
                     stale = False
+                    chan.fault_filter = self._fault_filter_for(wid)
                     w.chan = chan
                     w.state = "idle"
                     w.last_seen = time.time()
@@ -327,10 +384,24 @@ class SubprocessTransport(Transport):
                                  name=f"rc-exec-recv-{wid}",
                                  daemon=True).start()
 
+    @staticmethod
+    def _fault_filter_for(wid: int):
+        """Per-frame chaos filter for a worker channel: consults the
+        armed injector's ``protocol.recv`` site so a planned fault can
+        drop or delay an RPC reply (recovery then rides the attempt
+        deadline, like a real lost result would)."""
+        def _filter(msg: Dict[str, Any]):
+            inj = rfaults.active()
+            if inj is None:
+                return None
+            return inj.fire("protocol.recv", worker=wid,
+                            mtype=msg.get("type"), task=msg.get("task_id"))
+        return _filter
+
     def _recv_loop(self, w: _WorkerHandle, chan: protocol.Channel) -> None:
         while True:
             try:
-                msg = chan.recv()
+                msg = chan.recv()  # noqa: TMO001 — heartbeat monitor backstops a dead peer
             except protocol.ConnectionClosed:
                 self._worker_lost(w, "channel closed")
                 return
@@ -367,10 +438,16 @@ class SubprocessTransport(Transport):
                     w.state = "busy"
                     w.job = job
                     job.worker_id = w.wid
+                    if job.attempt_timeout_s is not None:
+                        job.deadline = time.time() + job.attempt_timeout_s
                     self._inflight[job.jid] = job
                     to_send = (job, w)
             job, w = to_send
             try:
+                # chaos site first: an injected crash/stall frame lands
+                # before the task, so the fault deterministically hits
+                # the attempt being dispatched (no result/death race)
+                self._maybe_inject_dispatch_fault(job, w)
                 w.chan.send({"type": "task", "task_id": job.jid,
                              "payload": job.payload})
             except (protocol.ConnectionClosed, OSError):
@@ -389,11 +466,32 @@ class SubprocessTransport(Transport):
                 return self._queue.popleft(), w
         return None, None
 
+    def _maybe_inject_dispatch_fault(self, job: _Job,
+                                     w: _WorkerHandle) -> None:
+        """``transport.dispatch`` chaos site: a planned fault frame is
+        sent just ahead of the task frame, so the crash (worker exits
+        with the attempt assigned but unfinished) or stall (worker goes
+        heartbeat-silent while the attempt runs) hits exactly the
+        dispatch the plan named."""
+        inj = rfaults.active()
+        if inj is None:
+            return
+        act = inj.fire("transport.dispatch", worker=w.wid, task=job.jid,
+                       label=job.label)
+        if act is None:
+            return
+        if act["action"] == "crash_worker":
+            w.chan.send({"type": "die"})
+        elif act["action"] == "stall_heartbeat":
+            w.chan.send({"type": "stall",
+                         "for_s": float(act.get("for_s", 1.0))})
+
     # -- results / faults ------------------------------------------------------
 
     def _on_result(self, w: _WorkerHandle, msg: Dict[str, Any]) -> None:
         with self._cond:
             w.last_seen = time.time()
+            self._crash_streak[w.wid] = 0  # a result proves the slot healthy
             job = self._inflight.pop(msg["task_id"], None)
             if w.job is job:
                 w.job = None
@@ -428,7 +526,19 @@ class SubprocessTransport(Transport):
             chan = w.chan
             if self._respawns < self._max_respawns():
                 self._respawns += 1
-                self._workers[w.wid] = self._spawn_locked(w.wid)
+                streak = self._crash_streak.get(w.wid, 0) + 1
+                self._crash_streak[w.wid] = streak
+                delay = self._policy.backoff_s(streak,
+                                               key=f"respawn.{w.wid}")
+                self._respawn_log.append({
+                    "worker": w.wid, "attempt": self._respawns,
+                    "streak": streak, "delay_s": delay})
+                if delay <= 0:
+                    self._workers[w.wid] = self._spawn_locked(w.wid)
+                else:
+                    # the monitor performs the spawn once the backoff
+                    # elapses; until then the dead handle holds the slot
+                    self._respawn_due[w.wid] = time.time() + delay
             self._cond.notify_all()
         if w.proc.poll() is None:
             w.proc.terminate()
@@ -436,7 +546,7 @@ class SubprocessTransport(Transport):
             w.proc.wait(timeout=2.0)
         except subprocess.TimeoutExpired:
             w.proc.kill()
-            w.proc.wait()
+            w.proc.wait()  # noqa: TMO001 — SIGKILL'd: reap cannot hang
         if chan is not None:
             chan.close()
         if job is not None:
@@ -451,9 +561,14 @@ class SubprocessTransport(Transport):
             with self._cond:
                 if self._closed:
                     return
-                workers = list(self._workers.values())
                 now = time.time()
-            for w in workers:
+                for wid, due in list(self._respawn_due.items()):
+                    if due <= now:  # backoff elapsed: perform the respawn
+                        del self._respawn_due[wid]
+                        self._workers[wid] = self._spawn_locked(wid)
+                        self._cond.notify_all()
+                workers = [(w, w.job) for w in self._workers.values()]
+            for w, job in workers:
                 if w.state == "dead":
                     continue
                 if w.proc.poll() is not None:
@@ -466,6 +581,13 @@ class SubprocessTransport(Transport):
                     self._worker_lost(
                         w, f"no heartbeat for "
                            f"{now - w.last_seen:.1f}s (hung?)")
+                elif (w.state == "busy" and job is not None
+                      and job.deadline is not None and now > job.deadline):
+                    # per-attempt deadline (FailurePolicy.attempt_timeout_s):
+                    # also the recovery path for a dropped result reply
+                    self._worker_lost(
+                        w, f"attempt exceeded its "
+                           f"{job.attempt_timeout_s:.1f}s deadline")
                 elif (w.chan is None
                       and now - w.spawned_at > self._start_timeout_s):
                     self._worker_lost(w, "never connected (start timeout)")

@@ -227,9 +227,17 @@ class _TaskRun:
                 pass
 
 
+#: chaos: heartbeats are suppressed until this wall-clock time — set by
+#: a ``stall`` frame so the parent's heartbeat-timeout backstop can be
+#: exercised deterministically against a live, task-running worker.
+_STALL_UNTIL = [0.0]
+
+
 def _heartbeat_loop(chan: protocol.Channel, period_s: float) -> None:
     while True:
         time.sleep(period_s)
+        if time.time() < _STALL_UNTIL[0]:
+            continue  # stalled: alive but silent
         try:
             chan.send({"type": "heartbeat", "t": time.time()})
         except (protocol.ConnectionClosed, OSError):
@@ -262,6 +270,13 @@ def main(argv=None) -> int:
             coordinator_address=args.jax_coordinator,
             num_processes=args.jax_num_processes,
             process_id=args.jax_process_id)
+    if os.environ.get("REPRO_FAULT_PLAN"):
+        # worker-side chaos: the parent (a bench/test) shipped a fault
+        # plan through the transport's env hook — sites that fire inside
+        # the worker (e.g. checkpoint.save tears) arm here
+        from repro.core.resilience import faults as _faults
+        _faults.install_from_env()
+
     # warm the runtime off the task path and tell the parent the pool size
     import jax
     chan.send({"type": "ready", "worker_id": args.worker_id,
@@ -270,7 +285,7 @@ def main(argv=None) -> int:
     current: Optional[_TaskRun] = None
     while True:
         try:
-            msg = chan.recv()
+            msg = chan.recv()  # noqa: TMO001 — main RPC loop; heartbeat thread exits on a dead parent
         except protocol.ConnectionClosed:
             return 0  # parent closed the channel: clean exit
         mtype = msg.get("type")
@@ -289,6 +304,13 @@ def main(argv=None) -> int:
         elif mtype == "control":
             if current is not None:
                 current.handle_control(msg)
+        elif mtype == "die":
+            # injected crash (FaultPlan.crash_worker): exit hard,
+            # mid-task — the parent sees a real process death
+            os._exit(3)
+        elif mtype == "stall":
+            # injected heartbeat stall: stay alive, go silent for a while
+            _STALL_UNTIL[0] = time.time() + float(msg.get("for_s", 1.0))
         elif mtype == "shutdown":
             if current is not None and current.control is not None:
                 current.control.stop()

@@ -281,7 +281,7 @@ class Pipeline:
     def run(self, agent: Optional[RemoteAgent] = None) -> Dict[str, Any]:
         """Blocking single-pipeline execution; raises on stage failure."""
         self.start(agent)
-        self.wait()
+        self.wait()  # noqa: TMO001 — blocking-run API; per-task deadlines bound the stages
         with self._lock:
             error = self.error
             results = self.results

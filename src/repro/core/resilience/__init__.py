@@ -1,0 +1,33 @@
+"""Resilience layer: deterministic fault injection + unified failure policy.
+
+Two halves, used together by the chaos suite and separately by the
+runtime:
+
+* :mod:`repro.core.resilience.faults` — seeded :class:`FaultPlan` /
+  :class:`FaultInjector` with injection sites threaded through the
+  transport, worker, RPC protocol, checkpoint store, and fleet router,
+  so every failure mode the runtime claims to survive is reproducible
+  in-process from a single seed.
+* :mod:`repro.core.resilience.policy` — :class:`FailurePolicy`
+  (exponential backoff + deterministic jitter, retry budgets,
+  per-attempt timeouts, end-to-end deadlines) honored by the agent's
+  retry loop, worker respawn in ``SubprocessTransport``, and the
+  router's per-engine :class:`CircuitBreaker`.
+"""
+from repro.core.resilience.faults import (
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    active,
+    inject,
+    install_from_env,
+    set_fault_injector,
+)
+from repro.core.resilience.policy import CircuitBreaker, FailurePolicy
+
+__all__ = [
+    "CircuitBreaker", "FailurePolicy", "FaultInjector", "FaultPlan",
+    "FaultSpec", "InjectedFault", "active", "inject", "install_from_env",
+    "set_fault_injector",
+]

@@ -13,7 +13,11 @@ import dataclasses
 import enum
 import threading
 import time
-from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+from typing import (TYPE_CHECKING, Any, Callable, Deque, Dict, List,
+                    Optional, Tuple)
+
+if TYPE_CHECKING:  # annotation only — keeps this module import-light
+    from repro.core.resilience.policy import FailurePolicy
 
 
 class TaskState(enum.Enum):
@@ -144,8 +148,12 @@ class TaskDescription:
     num_devices: int = 1
     mesh_axes: Tuple[str, ...] = ("data",)
     mesh_shape: Optional[Tuple[int, ...]] = None  # default: (num_devices,)
-    # policy
+    # policy.  ``max_retries`` is the legacy knob; setting ``policy``
+    # (repro.core.resilience.FailurePolicy) supersedes it and adds
+    # exponential backoff between attempts, a per-attempt timeout, and
+    # an end-to-end deadline across all attempts.
     max_retries: int = 2
+    policy: Optional["FailurePolicy"] = None
     priority: int = 0
     timeout_s: Optional[float] = None
     speculative: bool = True  # eligible for straggler duplicate execution
@@ -190,6 +198,11 @@ class Task:
     error: Optional[str] = None
     attempts: int = 0
     preemptions: int = 0  # times a service attempt yielded to higher priority
+    # failure-policy scheduling state (written by the agent): a retry
+    # backoff parks the task until ``not_before``; ``deadline`` is the
+    # absolute end-to-end cutoff derived from ``policy.deadline_s``
+    not_before: float = 0.0
+    deadline: Optional[float] = None
     submitted_at: float = dataclasses.field(default_factory=time.time)
     started_at: Optional[float] = None
     finished_at: Optional[float] = None

@@ -64,6 +64,7 @@ import numpy as np
 
 from repro.common.params import init_params, is_param
 from repro.configs.base import ModelConfig, RunConfig
+from repro.core.resilience import faults as rfaults
 from repro.core.task import ServiceControl, ServicePreempted
 from repro.models.lm import lm_cache_specs, lm_paged_cache_specs
 from repro.serve.handoff import KVHandoff
@@ -396,6 +397,31 @@ class ServeEngine:
             out = list(self.queue)
             self.queue.clear()
         return out
+
+    def recover_outstanding(self) -> List[Any]:
+        """Crash recovery (the router's circuit-breaker path): collect
+        every accepted-but-unfinished entry — bound slots, queued
+        entries, parked handoffs — and return them for re-routing
+        instead of failing them.  Bound requests lose their in-pool KV
+        with the crashed state, so they are reset to QUEUED and
+        re-enter as plain prompts (:meth:`Request.reset_for_retry`
+        documents why the regenerated output is reproducible).  Queued
+        entries and exported handoffs return as-is — a handoff's page
+        blocks are host-side copies independent of the dead engine
+        state.  The slot state is released; the next ``run_service``
+        starts fresh."""
+        with self._lock:
+            bound = [r for r in self.slots if r is not None]
+            queued, self.queue = list(self.queue), collections.deque()
+            handed, self._outbox = list(self._outbox), collections.deque()
+        for req in bound:
+            if not req.done():
+                req.reset_for_retry()
+        self._release_state()
+        recovered = bound + queued + handed
+        if recovered:
+            self._bump("recovered", len(recovered))
+        return recovered
 
     def has_work(self) -> bool:
         with self._lock:
@@ -830,6 +856,15 @@ class ServeEngine:
         """Admit what fits, spend one bounded prefill chunk, then run one
         fused decode over every slot whose prefill already finished.
         Returns False when there was nothing to do."""
+        inj = rfaults.active()
+        if inj is not None and self.has_work():
+            # chaos site (FaultPlan.crash_engine): only steps with work
+            # count, so the Nth firing is a logical point in the
+            # workload, not a function of idle-spin timing
+            act = inj.fire("engine.step", engine=self.uid)
+            if act is not None and act.get("action") == "crash":
+                raise rfaults.InjectedFault(
+                    f"injected crash at {self.uid} step")
         progressed = self._admit() > 0
         progressed = self._prefill_step() or progressed
         if self.paged:

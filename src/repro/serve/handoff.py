@@ -25,7 +25,24 @@ from typing import Any
 
 import numpy as np
 
+from repro.core.resilience import faults as _faults
 from repro.serve.request import Request
+
+
+def maybe_fail_delivery(hand: "KVHandoff") -> None:
+    """Chaos hook (``FaultPlan.fail_handoff``): the router consults
+    this at the moment a migrated prefill is submitted to its decode
+    target.  A fired fault raises
+    :class:`~repro.core.resilience.faults.InjectedFault` and the
+    router re-queues the handoff for another route — the page blocks
+    are intact parent-side, so the request is re-routed, never lost."""
+    inj = _faults.active()
+    if inj is None:
+        return
+    act = inj.fire("handoff.deliver", rid=hand.rid, source=hand.source)
+    if act is not None and act.get("action") == "fail":
+        raise _faults.InjectedFault(
+            f"injected handoff-delivery failure ({hand.rid})")
 
 
 @dataclasses.dataclass

@@ -116,6 +116,25 @@ class Request:
         """Block until the request reaches a terminal state."""
         return self._finished.wait(timeout)
 
+    def reset_for_retry(self) -> None:
+        """Return a non-terminal request to QUEUED so a router can
+        re-route it after an engine crash destroyed its in-pool KV.
+        Generated tokens are discarded and regenerated from the prompt
+        on the new engine — greedy decoding (the default) regenerates
+        them bit-identically, and seeded sampling restarts its
+        per-request stream from ``seed``, so the retried output is
+        reproducible either way.  Must not be called on a finished
+        request (its waiters have already been released)."""
+        if self.done():
+            raise RuntimeError(f"cannot reset finished request {self.rid}")
+        self.state = RequestState.QUEUED
+        self.tokens = []
+        self.token_times = []
+        self.error = None
+        self.admitted_at = None
+        self.first_token_at = None
+        self.finished_at = None
+
     def _finish(self, state: RequestState, error: Optional[str] = None) -> None:
         self.state = state
         self.error = error

@@ -39,6 +39,22 @@ and ships them to a decode engine **through the Transport**
 scatters the blocks into its own pool and rewrites a fresh block-table
 row.  Bytes on the wire are bounded by the pages the migrating request
 owns — never the pool.
+
+**Resilience** (``policy=``): constructing the router with a
+:class:`~repro.core.resilience.policy.FailurePolicy` gives every
+thread-mode member a
+:class:`~repro.core.resilience.policy.CircuitBreaker` and turns engine
+crashes from terminal into recoverable.  A crash recovers the engine's
+outstanding work (bound requests reset and re-enter as prompts; queued
+entries and parked handoffs move back verbatim), re-routes it through
+the rolling-restart requeue path, and restarts the engine with fresh
+state; after ``eject_after`` consecutive faults the breaker opens and
+the member receives no traffic until, ``probation_s`` later, a single
+probe request is routed to it — the probe finishing DONE re-admits the
+member (and records the crash→re-admission latency in ``stats()``),
+anything else re-ejects it.  All breaker/probe state is visible in
+:meth:`stats` and :meth:`admission_signals`; zero requests are lost or
+duplicated across the cycle (tests/test_resilience.py).
 """
 from __future__ import annotations
 
@@ -55,11 +71,13 @@ from repro.common.params import init_params
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core.agent import RemoteAgent
 from repro.core.pilot import PilotManager
+from repro.core.resilience.faults import InjectedFault
+from repro.core.resilience.policy import CircuitBreaker, FailurePolicy
 from repro.core.session import KindAwarePlacement, PlacementPolicy
 from repro.core.task import ServiceControl, ServicePreempted, TaskDescription, TaskState
 from repro.core.transport import InProcessTransport, Transport
 from repro.serve.engine import ServeEngine
-from repro.serve.handoff import KVHandoff
+from repro.serve.handoff import KVHandoff, maybe_fail_delivery
 from repro.serve.request import Request, RequestState
 from repro.train.state import model_specs
 
@@ -78,13 +96,21 @@ class _Member:
     """One engine in the fleet: its control handle plus how it runs
     (thread mode or a service task on a per-pilot agent)."""
 
-    def __init__(self, engine: ServeEngine, role: str):
+    def __init__(self, engine: ServeEngine, role: str,
+                 breaker: Optional[CircuitBreaker] = None):
         self.engine = engine
         self.role = role  # "any" | "prefill" | "decode"
         self.control = ServiceControl()
         self.draining = False  # guarded-by router._cond (out of rotation)
         self.error: Optional[str] = None
         self.result: Optional[Dict[str, Any]] = None
+        # resilience (router policy mode): the breaker gates traffic
+        # after crashes; probe_req is the request whose completion
+        # decides re-admission
+        self.breaker = breaker
+        self.probe_req: Optional[Request] = None  # guarded-by router._cond
+        self.crashes = 0  # guarded-by router._cond
+        self.crashed_at: Optional[float] = None  # guarded-by router._cond
         # thread mode
         self.thread: Optional[threading.Thread] = None
         self.paused = threading.Event()  # set while checkpointed (restart)
@@ -116,7 +142,8 @@ class EngineRouter:
                  placement: Optional[PlacementPolicy] = None,
                  num_devices: int = 1, group: Optional[str] = None,
                  priority: int = 0, poll_s: float = 0.002,
-                 engine_queue_bound: Optional[int] = None):
+                 engine_queue_bound: Optional[int] = None,
+                 policy: Optional[FailurePolicy] = None):
         if not engines:
             raise ValueError("need at least one engine")
         roles = list(roles) if roles is not None else [
@@ -131,7 +158,16 @@ class EngineRouter:
         if any(r == "prefill" for r in roles) and not any(
                 r in ("decode", "any") for r in roles):
             raise ValueError("prefill engines need a decode target")
-        self.members = [_Member(e, r) for e, r in zip(engines, roles)]
+        # a FailurePolicy turns engine crashes from terminal into
+        # recoverable: each member gets a circuit breaker (thread mode —
+        # pilot-mode restarts stay agent-driven through the task policy)
+        self.policy = policy
+        self.members = [
+            _Member(e, r,
+                    breaker=(CircuitBreaker(policy.eject_after,
+                                            policy.probation_s)
+                             if policy is not None else None))
+            for e, r in zip(engines, roles)]
         self._own_transport = transport is None
         self._transport = (transport if transport is not None
                            else InProcessTransport(max_workers=2,
@@ -150,6 +186,8 @@ class EngineRouter:
         self.queue: Deque[Any] = collections.deque()  # guarded-by: _cond
         self._stats: Dict[str, Any] = collections.defaultdict(int)  # guarded-by: _cond
         self._requests: List[Request] = []  # guarded-by: _cond
+        # crash -> re-admission latencies ({"engine", "recovery_s"})
+        self._recoveries: List[Dict[str, Any]] = []  # guarded-by: _cond
         self._stop = False  # guarded-by: _cond
         self._started = False
         self._router_thread: Optional[threading.Thread] = None
@@ -204,7 +242,16 @@ class EngineRouter:
 
     def _serve_loop(self, m: _Member) -> None:
         """Thread-mode engine body: run_service, pausing through the
-        checkpoint/restore cycle on each rolling restart."""
+        checkpoint/restore cycle on each rolling restart.
+
+        With a router :class:`FailurePolicy` installed, a crash is
+        *recoverable*: outstanding work is recovered
+        (:meth:`ServeEngine.recover_outstanding`) and re-routed through
+        the same requeue path a rolling restart uses, the member's
+        circuit breaker counts the fault, and the engine restarts
+        immediately with fresh state — the breaker, not the thread,
+        decides when it sees traffic again (ejected members idle until
+        a probationary probe re-admits them)."""
         state = None
         while True:
             try:
@@ -214,15 +261,31 @@ class EngineRouter:
                 state = e.state
                 m.control._clear_preempt()
                 m.paused.set()
-                m.resume.wait()
+                m.resume.wait()  # noqa: TMO001 — parked until restart; close() always sets resume
                 m.resume.clear()
                 m.paused.clear()
             except Exception as e:  # noqa: BLE001 — isolation boundary:
                 # a crashed engine must release its waiters, not hang them
-                m.error = f"{type(e).__name__}: {e}"
-                m.engine._fail_outstanding(
-                    f"engine {m.engine.uid} crashed: {m.error}")
-                return
+                if m.breaker is None:
+                    m.error = f"{type(e).__name__}: {e}"
+                    m.engine._fail_outstanding(
+                        f"engine {m.engine.uid} crashed: {m.error}")
+                    return
+                recovered = (m.control.take_requests()
+                             + m.engine.recover_outstanding())
+                with self._cond:
+                    m.crashes += 1
+                    if m.crashed_at is None:
+                        m.crashed_at = time.time()
+                    m.probe_req = None  # a bound probe died with the state
+                    self._stats["engine_crashes"] += 1
+                    self._stats[f"crashes.{m.engine.uid}"] += 1
+                    self._stats["requests_recovered"] += len(recovered)
+                self._requeue(recovered)
+                if m.breaker.record_fault():
+                    with self._cond:
+                        self._stats["ejections"] += 1
+                state = None  # fresh slot state on restart
 
     def close(self, timeout: Optional[float] = 30.0) -> None:
         """Stop routing and the engines; unrouted requests FAIL (use
@@ -316,11 +379,35 @@ class EngineRouter:
         with self._cond:
             out: Dict[str, Any] = dict(self._stats)
             out["router_queue"] = len(self.queue)
+            out["recoveries"] = [dict(r) for r in self._recoveries]
         out["engines"] = [m.engine.stats() for m in self.members]
+        if self.policy is not None:
+            out["breakers"] = {m.engine.uid: m.breaker.snapshot()
+                               for m in self.members
+                               if m.breaker is not None}
         for key in ("tokens_generated", "completed", "failed",
                     "handoffs_exported", "handoffs_imported"):
             out[f"fleet_{key}"] = sum(s.get(key, 0) for s in out["engines"])
         return out
+
+    def admission_signals(self) -> List[Dict[str, Any]]:
+        """Per-member routing view: the engine's own admission signals
+        plus the router-side state that gates them (role, draining,
+        serving, breaker snapshot, probe-in-flight)."""
+        sigs: List[Dict[str, Any]] = []
+        for m in self.members:
+            sig = m.engine.admission_signals()
+            with self._cond:
+                sig["draining"] = m.draining
+                sig["probe_inflight"] = m.probe_req is not None
+                sig["crashes"] = m.crashes
+            sig["role"] = m.role
+            sig["serving"] = m.serving()
+            sig["error"] = m.error
+            if m.breaker is not None:
+                sig["breaker"] = m.breaker.snapshot()
+            sigs.append(sig)
+        return sigs
 
     # -- routing core --------------------------------------------------------
 
@@ -352,9 +439,28 @@ class EngineRouter:
         want = "decode" if isinstance(entry, KVHandoff) else "prefill"
         with self._cond:
             live = [m for m in self.members
-                    if not m.draining and m.error is None and m.serving()]
+                    if not m.draining and m.error is None and m.serving()
+                    and (m.breaker is None or m.breaker.state == "closed")]
         exact = [m for m in live if m.role == want]
         return exact or [m for m in live if m.role == "any"]
+
+    def _pick_probe(self, entry) -> Optional[_Member]:
+        """An ejected member due its probationary health check: route
+        this entry to it as the probe.  ``breaker.admit()`` grants at
+        most one probe per probation window, and the probe's terminal
+        state (watched by :meth:`_monitor`) decides re-admission."""
+        want = "decode" if isinstance(entry, KVHandoff) else "prefill"
+        for m in self.members:
+            if m.breaker is None or m.error is not None:
+                continue
+            if m.role not in (want, "any") or not m.serving():
+                continue
+            with self._cond:
+                if m.draining or m.probe_req is not None:
+                    continue
+            if m.breaker.state != "closed" and m.breaker.admit():
+                return m
+        return None
 
     def _pick(self, entry) -> Optional[_Member]:
         """Best engine for this entry by admission signals, or None when
@@ -380,10 +486,16 @@ class EngineRouter:
         kept: List[Any] = []
         routed = 0
         for entry in pending:
-            m = self._pick(entry)
+            probe_m = self._pick_probe(entry)
+            m = probe_m if probe_m is not None else self._pick(entry)
             if m is None:
                 kept.append(entry)
                 continue
+            if probe_m is not None:
+                req = entry.request if isinstance(entry, KVHandoff) else entry
+                with self._cond:
+                    m.probe_req = req
+                    self._stats["probes_routed"] += 1
             if isinstance(entry, KVHandoff):
                 # the page blocks cross engines through the transport —
                 # the data plane a cross-node fabric will replace
@@ -403,6 +515,8 @@ class EngineRouter:
             try:
                 m.control.submit_request(entry)
             except RuntimeError:
+                if probe_m is not None:
+                    self._probe_failed(m)
                 kept.append(entry)  # raced a drain/stop: hold and re-pick
                 continue
             routed += 1
@@ -422,7 +536,7 @@ class EngineRouter:
         loses nothing — the original handoff is still parent-side and is
         simply re-queued for another route."""
         try:
-            shipped = fut.result()
+            shipped = fut.result()  # noqa: TMO001 — done-callback: result is ready
         except Exception:  # noqa: BLE001 — WorkerCrashed/RemoteTaskError
             self._requeue([hand])
             return
@@ -434,16 +548,39 @@ class EngineRouter:
         self._deliver(shipped, m)
 
     def _deliver(self, hand: KVHandoff, m: _Member) -> None:
-        """Transport-side delivery of one migrated prefill."""
+        """Transport-side delivery of one migrated prefill.  Both an
+        injected delivery failure (``FaultPlan.fail_handoff``) and a
+        drain race leave the handoff intact parent-side — it is
+        re-queued for another route, never lost."""
         try:
+            maybe_fail_delivery(hand)
             m.control.submit_request(hand)
-        except RuntimeError:
-            self._requeue([hand])  # target began draining: re-route
+        except (InjectedFault, RuntimeError) as e:
+            injected = isinstance(e, InjectedFault)
+            was_probe = False
+            with self._cond:
+                if injected:
+                    self._stats["handoff_faults"] += 1
+                if m.probe_req is hand.request:
+                    m.probe_req = None
+                    was_probe = True
+                    self._stats["probes_failed"] += 1
+            if m.breaker is not None and (injected or was_probe):
+                m.breaker.record_fault()
+            self._requeue([hand])
             return
         with self._cond:
             self._stats["handoffs_routed"] += 1
             self._stats["handoff_bytes"] += hand.kv_bytes
             self._stats["handoff_pages"] += hand.n_pages
+
+    def _probe_failed(self, m: _Member) -> None:
+        """A probe could not run or came back FAILED: re-eject (the
+        breaker reopens and restarts its probation window)."""
+        with self._cond:
+            m.probe_req = None
+            self._stats["probes_failed"] += 1
+        m.breaker.record_fault()
 
     def _harvest_handoffs(self) -> bool:
         """Collect exported prefills into the shared queue (they route
@@ -478,7 +615,34 @@ class EngineRouter:
                 with self._cond:
                     self._stats["rerouted"] += len(stolen)
                 moved = True
+        moved = self._resolve_probes() or moved
         return moved
+
+    def _resolve_probes(self) -> bool:
+        """Settle finished probationary probes: DONE re-admits the
+        member (breaker closes, recovery latency recorded), FAILED
+        re-ejects it for another probation round."""
+        resolved = False
+        for m in self.members:
+            with self._cond:
+                pr = m.probe_req
+            if pr is None or not pr.done():
+                continue
+            resolved = True
+            if pr.state is RequestState.DONE:
+                m.breaker.record_success()
+                with self._cond:
+                    m.probe_req = None
+                    self._stats["readmissions"] += 1
+                    if m.crashed_at is not None:
+                        self._recoveries.append({
+                            "engine": m.engine.uid,
+                            "recovery_s": time.time() - m.crashed_at,
+                        })
+                        m.crashed_at = None
+            else:
+                self._probe_failed(m)
+        return resolved
 
     def _requeue(self, entries: List[Any]) -> None:
         if not entries:

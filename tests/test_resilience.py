@@ -1,0 +1,352 @@
+"""Resilience-layer chaos suite (tentpole PR): deterministic fault
+injection, unified FailurePolicy, and crash-consistent checkpoints.
+
+Covers the failure modes the runtime claims to survive, each driven by a
+seeded :class:`FaultPlan` so the schedule is reproducible:
+
+- same seed => same logical fault-event trace, run twice (fleet chaos);
+- a checkpoint torn mid-write restores the *prior* step bitwise;
+- the router's circuit breaker ejects a crashed engine, serves around
+  it, and re-admits it after a probationary probe — with zero lost and
+  zero duplicated requests, token streams bitwise-equal to an
+  undisturbed run (f32 compute, like tests/test_fleet.py);
+- an end-to-end deadline expiry fails *cleanly*: devices recycled back
+  to the pilot, zero quota violations;
+- a killed worker respawns with policy-driven backoff recorded in the
+  transport's respawn stats.
+
+FailurePolicy/CircuitBreaker unit tests pin the deterministic-jitter
+backoff schedule and the closed -> open -> half_open -> closed state
+machine the system tests rely on.
+"""
+import dataclasses
+import time
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import (
+    CheckpointCorrupt, latest_step, restore, save, verify_step,
+)
+from repro.common.params import init_params
+from repro.configs import get_config
+from repro.core.exec.transport import SubprocessTransport, WorkerCrashed
+from repro.core.pilot import Pilot
+from repro.core.resilience import (
+    CircuitBreaker, FailurePolicy, FaultPlan, inject, set_fault_injector,
+)
+from repro.core.task import TaskDescription, TaskState
+from repro.serve import Request, RequestState, ServeEngine, build_fleet
+from repro.train.state import model_specs
+
+CFG = get_config("tinyllama-1.1b", smoke=True)
+CFG32 = dataclasses.replace(CFG, compute_dtype=jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), model_specs(CFG))
+
+
+# ---------------------------------------------------------------------------
+# module-level task fns (picklable-task contract, as in test_exec_transport)
+# ---------------------------------------------------------------------------
+
+
+def add_one(x):
+    return x + 1
+
+
+# ---------------------------------------------------------------------------
+# FailurePolicy: deterministic backoff, retry budget, deadlines
+# ---------------------------------------------------------------------------
+
+
+def test_backoff_deterministic_and_bounded():
+    pol = FailurePolicy(backoff_base_s=0.5, backoff_factor=2.0,
+                        backoff_max_s=3.0, jitter=0.1)
+    # same (attempt, key) -> identical delay, run-to-run
+    assert pol.backoff_s(1, key="t1") == pol.backoff_s(1, key="t1")
+    assert pol.backoff_s(2, key="t1") == pol.backoff_s(2, key="t1")
+    # different keys de-synchronize (thundering-herd jitter)
+    assert pol.backoff_s(1, key="t1") != pol.backoff_s(1, key="t2")
+    # exponential envelope with bounded jitter, capped at backoff_max_s
+    for attempt, base in ((1, 0.5), (2, 1.0), (3, 2.0)):
+        d = pol.backoff_s(attempt, key="k")
+        assert base <= d <= base * 1.1 + 1e-9, (attempt, d)
+    assert pol.backoff_s(9, key="k") <= 3.0 * 1.1 + 1e-9
+
+
+def test_retry_budget_and_deadline_arithmetic():
+    pol = FailurePolicy(max_retries=2, deadline_s=10.0)
+    # attempts consumed: 1 (first) + 2 retries
+    assert pol.allow_retry(1) and pol.allow_retry(2)
+    assert not pol.allow_retry(3)
+    assert pol.deadline_at(100.0) == 110.0
+    assert FailurePolicy(deadline_s=None).deadline_at(100.0) is None
+
+
+def test_circuit_breaker_state_machine():
+    br = CircuitBreaker(eject_after=2, probation_s=0.05)
+    assert br.state == "closed"
+    assert not br.record_fault()          # streak 1: still closed
+    assert br.record_fault()              # streak 2: ejected
+    assert br.state == "open"
+    assert not br.admit()                 # probation not elapsed
+    time.sleep(0.06)
+    assert br.admit()                     # the single probe
+    assert br.state == "half_open"
+    assert not br.admit()                 # probe already in flight
+    br.record_fault()                     # probe failed: re-open
+    assert br.state == "open"
+    time.sleep(0.06)
+    assert br.admit()
+    br.record_success()                   # probe succeeded: re-admitted
+    assert br.state == "closed"
+    assert br.snapshot()["consecutive_faults"] == 0
+    assert [state for state, _ in br.transitions] == \
+        ["open", "half_open", "open", "half_open", "closed"]
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: seeded, serializable, reproducible trace
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_roundtrip_and_injector_determinism():
+    plan = (FaultPlan(seed=5)
+            .crash_worker(worker=1, at_task=2)
+            .drop_reply(nth=3)
+            .tear_checkpoint(at_byte=64, step=7))
+    assert FaultPlan.from_json(plan.to_json()).to_json() == plan.to_json()
+
+    def drive(inj):
+        fired = []
+        for task in range(1, 4):
+            for worker in range(2):
+                fired.append(inj.fire("transport.dispatch",
+                                      worker=worker, task=task))
+        for n in range(4):
+            fired.append(inj.fire("protocol.recv", mtype="result", frame=n))
+        fired.append(inj.fire("checkpoint.save", step=7))
+        return fired
+
+    a, b = plan.injector(), plan.injector()
+    assert drive(a) == drive(b)
+    assert a.trace() == b.trace()
+    assert a.all_fired() and not a.pending()
+    # each spec fires exactly once, at its logical coordinate
+    assert [(e[1], e[2]) for e in a.trace()] == [
+        ("transport.dispatch", "crash_worker"),
+        ("protocol.recv", "drop"),
+        ("checkpoint.save", "tear"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# crash-consistent checkpoints: torn write -> prior step restored bitwise
+# ---------------------------------------------------------------------------
+
+
+def test_torn_checkpoint_restores_prior_step_bitwise(tmp_path):
+    d = str(tmp_path)
+    rng = np.random.default_rng(3)
+    state1 = {"w": jnp.asarray(rng.normal(size=(16,)).astype(np.float32)),
+              "step": jnp.asarray(1)}
+    state2 = {"w": jnp.asarray(rng.normal(size=(16,)).astype(np.float32)),
+              "step": jnp.asarray(2)}
+    save(d, 1, state1)
+    # a crash mid-write of step 2, after the rename made it visible
+    with inject(FaultPlan(seed=0).tear_checkpoint(at_byte=48, step=2)) as inj:
+        save(d, 2, state2)
+        assert inj.all_fired()
+    assert verify_step(d, 1)
+    assert not verify_step(d, 2)
+    assert latest_step(d, verify=False) == 2     # naive scan would load it
+    with pytest.warns(RuntimeWarning):
+        assert latest_step(d, verify=True) == 1  # verified recovery skips it
+    with pytest.raises(CheckpointCorrupt):
+        restore(d, state1, step=2)
+    with pytest.warns(RuntimeWarning):
+        got = restore(d, state1)
+    assert int(got["step"]) == 1
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.asarray(state1["w"]))
+
+
+# ---------------------------------------------------------------------------
+# fleet chaos: breaker eject/probation/re-admit, reproducible trace,
+# zero lost, zero duplicated, bitwise-equal streams
+# ---------------------------------------------------------------------------
+
+
+def _chaos_fleet_run(params, prompts, gen, plan):
+    """One fleet run under the plan: engine eng0 crashes mid-decode, is
+    ejected (eject_after=1), probed after probation, re-admitted."""
+    policy = FailurePolicy(eject_after=1, probation_s=0.2)
+    router = build_fleet(CFG32, num_engines=2, params=params, max_slots=2,
+                         max_len=96, page_size=16, name_prefix="flt",
+                         router_kwargs={"policy": policy})
+    inj = plan.injector()
+    set_fault_injector(inj)
+    try:
+        with router:
+            reqs = [router.submit(Request(p, max_new_tokens=gen))
+                    for p in prompts]
+            assert router.drain(timeout=300)
+            # the probationary probe is a real request: feed tiny ones
+            # until the ejected engine has been re-admitted
+            rng = np.random.default_rng(123)
+            deadline = time.time() + 30
+            while time.time() < deadline:
+                st = router.stats()
+                if st.get("readmissions", 0) >= st.get("ejections", 0):
+                    break
+                router.submit(Request(
+                    rng.integers(1, CFG.vocab_size, 4).astype(np.int32),
+                    max_new_tokens=2))
+                router.drain(timeout=60)
+                time.sleep(0.02)
+            stats = router.stats()
+    finally:
+        set_fault_injector(None)
+    return reqs, stats, inj.trace()
+
+
+def test_breaker_ejects_probes_and_readmits_bitwise(params):
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, CFG.vocab_size, int(n)).astype(np.int32)
+               for n in (6, 9, 5, 8, 7, 10)]
+    gen = 10
+    # undisturbed single-engine reference (greedy, f32: bitwise target)
+    eng = ServeEngine(CFG32, params=params, max_slots=2, max_len=96,
+                      page_size=16)
+    ref = [eng.submit(Request(p, max_new_tokens=gen)) for p in prompts]
+    eng.run_until_drained()
+
+    def plan():
+        return FaultPlan(seed=7).crash_engine(engine="flt.eng0", at_step=3)
+
+    reqs, st, trace = _chaos_fleet_run(params, prompts, gen, plan())
+
+    # zero lost, zero duplicated: every request terminal exactly once,
+    # with exactly the requested number of tokens (a duplicated or
+    # re-run-without-reset request would double-append)
+    assert all(r.state is RequestState.DONE for r in reqs)
+    assert [len(r.tokens) for r in reqs] == [gen] * len(reqs)
+    # recovery is invisible in the streams: bitwise-equal to undisturbed
+    assert [r.tokens for r in reqs] == [r.tokens for r in ref]
+
+    assert st["engine_crashes"] == 1
+    assert st["ejections"] == 1 and st["readmissions"] == 1
+    assert st["requests_recovered"] >= 1
+    assert st["recoveries"] and st["recoveries"][0]["engine"] == "flt.eng0"
+    assert st["recoveries"][0]["recovery_s"] > 0
+    snap = st["breakers"]["flt.eng0"]
+    assert snap["state"] == "closed"
+    assert [state for state, _ in snap["transitions"]] == \
+        ["open", "half_open", "closed"]
+
+    # same seed => same logical fault-event trace (chaos reproducibility)
+    reqs2, _, trace2 = _chaos_fleet_run(params, prompts, gen, plan())
+    assert trace2 == trace
+    assert [r.tokens for r in reqs2] == [r.tokens for r in ref]
+
+
+# ---------------------------------------------------------------------------
+# deadline expiry: clean failure, devices recycled, quotas balanced
+# ---------------------------------------------------------------------------
+
+
+class _FakeDevice:
+    def __init__(self, i):
+        self.id = i
+        self.platform = "cpu"
+
+
+class _FakePilot(Pilot):
+    """Pilot over dummy devices; carve skips jax Mesh construction."""
+
+    def carve(self, devices, mesh_shape=None, mesh_axes=("data",)):
+        return SimpleNamespace(devices=tuple(devices), size=len(devices),
+                               backend="fake", build_time_s=0.0)
+
+
+def _always_fails(comm):
+    raise ValueError("permanently broken task body")
+
+
+def test_deadline_expiry_fails_cleanly_devices_recycled():
+    from repro.core.agent import RemoteAgent
+
+    pilot = _FakePilot("fake.4", [_FakeDevice(i) for i in range(4)])
+    pol = FailurePolicy(max_retries=1000, backoff_base_s=0.05,
+                        backoff_factor=1.0, jitter=0.0, deadline_s=0.6)
+    with RemoteAgent(pilot, max_workers=2) as agent:
+        agent.set_quota("grp", 2)
+        t0 = time.time()
+        (task,) = agent.submit([TaskDescription(
+            name="doomed", fn=_always_fails, num_devices=2, group="grp",
+            policy=pol)])
+        # failed terminally via the deadline, not the retry budget
+        assert task.state is TaskState.FAILED
+        assert "deadline exceeded" in task.error
+        assert 1 <= task.attempts < 1000
+        assert time.time() - t0 < 30
+        # clean: every lease returned, fairness invariant intact
+        deadline = time.time() + 5
+        while pilot.free_count() != 4 and time.time() < deadline:
+            time.sleep(0.01)
+        assert pilot.free_count() == 4
+        assert agent.quota_violations() == {}
+
+
+# ---------------------------------------------------------------------------
+# worker respawn: policy-driven backoff recorded in transport stats
+# ---------------------------------------------------------------------------
+
+
+def test_worker_respawn_backoff_recorded():
+    plan = FaultPlan(seed=1).crash_worker(worker=0, at_task=1)
+    sub = SubprocessTransport(max_workers=1, worker_devices=1,
+                              heartbeat_s=0.1, heartbeat_timeout_s=2.0)
+    try:
+        with inject(plan) as inj:
+            fut = sub.submit(add_one, 41, label="doomed-dispatch")
+            with pytest.raises(WorkerCrashed):
+                fut.result(timeout=120)
+            assert inj.all_fired()
+            # the respawned worker serves the retry
+            assert sub.submit(add_one, 41).result(timeout=120) == 42
+        st = sub.stats()
+    finally:
+        sub.shutdown(wait=True)
+    assert st["respawns"] >= 1
+    entry = st["respawn_log"][0]
+    assert entry["worker"] == 0 and entry["streak"] == 1
+    # policy-driven backoff: non-zero, bounded, jittered off the base
+    assert 0.01 <= entry["delay_s"] <= 5.0
+
+
+# ---------------------------------------------------------------------------
+# Request.reset_for_retry: the engine-recovery primitive
+# ---------------------------------------------------------------------------
+
+
+def test_reset_for_retry_requeues_and_rejects_finished():
+    r = Request(np.arange(1, 6, dtype=np.int32), max_new_tokens=4)
+    r.state = RequestState.RUNNING
+    r.tokens = [3, 1]
+    r.token_times = [0.1, 0.2]
+    r.admitted_at = r.first_token_at = 1.0
+    r.reset_for_retry()
+    assert r.state is RequestState.QUEUED
+    assert r.tokens == [] and r.token_times == []
+    assert r.admitted_at is None and r.first_token_at is None
+    assert not r.done()
+    r._finish(RequestState.DONE)
+    with pytest.raises(RuntimeError):
+        r.reset_for_retry()
